@@ -1,0 +1,123 @@
+"""Fig. 7 analog — HDP block pruning vs the Top-K oracle.
+
+Sweeps rho_B (both branches of Alg. 2 line 15) and the Top-K keep ratio;
+reports, per point:
+
+  method, param, achieved block sparsity, top-1 agreement vs dense
+  (accuracy proxy), mean attention-output cosine, mask IoU vs Top-K at
+  matched sparsity.
+
+Expected paper behaviour to check: HDP tracks Top-K closely up to ~70%
+sparsity and diverges past ~80% (the mean!=median assumption breaks —
+the achieved sparsity stops following the requested rho_B).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import topk
+from repro.core.config import HDPConfig
+from repro.core.hdp import hdp_attention
+
+RHO_GRID = (-0.8, -0.5, -0.2, 0.01, 0.2, 0.35, 0.5, 0.65, 0.8, 0.9)
+KEEP_GRID = (0.9, 0.75, 0.6, 0.45, 0.3, 0.2, 0.1, 0.05)
+
+
+def _hdp_cfg(rho: float, block: int) -> HDPConfig:
+    return HDPConfig(rho_b=rho, block_q=block, block_k=block,
+                     head_pruning=False, approx=True, causal=True)
+
+
+def _hdp_attn_fn(hdp: HDPConfig):
+    def fn(li, q, k, v):
+        out, _ = hdp_attention(q, k, v, hdp)
+        return out
+    return fn
+
+
+def _topk_attn_fn(keep_ratio: float, block: int):
+    def fn(li, q, k, v):
+        out, _ = topk.topk_attention(q, k, v, block, block, keep_ratio,
+                                     causal=True)
+        return out
+    return fn
+
+
+def run(scale: str = "base", block: int = 2, n_eval: int = 2,
+        train_steps: int = 400) -> List[Dict]:
+    cfg, params = common.train_model(scale, steps=train_steps)
+    batches = common.eval_batches(n_eval)
+    caps = common.capture_qkv(cfg, params, jnp.asarray(batches[0]))
+    rows = []
+
+    # ---- Top-K oracle sweep (exact scores, per-row top-k blocks) ----
+    topk_masks = {}
+    for keep in KEEP_GRID:
+        ag = common.agreement_with(cfg, params,
+                                   _topk_attn_fn(keep, block), batches)
+        sps, masks = [], []
+        for c in caps:
+            scores = jnp.einsum("bhqd,bhkd->bhqk", c["q"], c["k"])
+            from repro.core import blocking
+            valid = blocking.causal_block_valid(
+                scores.shape[-2], scores.shape[-1], block, block)
+            m = topk.topk_block_mask(scores, block, block, keep, valid)
+            masks.append(m)
+            nv = jnp.maximum(valid.sum() * np.prod(m.shape[:-2]), 1)
+            sps.append(1.0 - float((m & valid).sum()) / float(nv))
+        sp = float(np.mean(sps))
+        topk_masks[keep] = masks
+        rows.append({"method": "topk", "param": keep,
+                     "block_sparsity": round(sp, 4),
+                     "agreement": round(ag, 4)})
+
+    # ---- HDP rho_B sweep ----
+    for rho in RHO_GRID:
+        hdp = _hdp_cfg(rho, block)
+        ag = common.agreement_with(cfg, params, _hdp_attn_fn(hdp), batches)
+        sps, cosines, masks = [], [], []
+        for c in caps:
+            out, st = hdp_attention(c["q"], c["k"], c["v"], hdp)
+            from repro.core.hdp import dense_attention_reference
+            ref = dense_attention_reference(c["q"], c["k"], c["v"],
+                                            causal=True)
+            cosines.append(common.cosine(out, ref))
+            sps.append(float(st.block_sparsity))
+            masks.append(st.keep_blocks)
+        sp = float(np.mean(sps))
+        # mask IoU vs the Top-K mask with the closest matched sparsity
+        best_keep, best_d = None, 9e9
+        for keep in KEEP_GRID:
+            tk_sp = next(r["block_sparsity"] for r in rows
+                         if r["method"] == "topk" and r["param"] == keep)
+            if abs(tk_sp - sp) < best_d:
+                best_keep, best_d = keep, abs(tk_sp - sp)
+        ious = [float(topk.mask_agreement(m, tm))
+                for m, tm in zip(masks, topk_masks[best_keep])]
+        rows.append({"method": "hdp", "param": rho,
+                     "block_sparsity": round(sp, 4),
+                     "agreement": round(ag, 4),
+                     "attn_cosine": round(float(np.mean(cosines)), 4),
+                     "mask_iou_vs_topk": round(float(np.mean(ious)), 4),
+                     "matched_topk_keep": best_keep})
+    return rows
+
+
+def main(scale: str = "base", quick: bool = False) -> List[Dict]:
+    rows = run(scale, n_eval=1 if quick else 2,
+               train_steps=200 if quick else 400)
+    print(f"# block_pruning (Fig.7 analog) scale={scale}")
+    hdr = ["method", "param", "block_sparsity", "agreement",
+           "attn_cosine", "mask_iou_vs_topk"]
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in hdr))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

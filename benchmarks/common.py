@@ -1,0 +1,225 @@
+"""Shared benchmark substrate: trained tiny models + Q/K/V capture.
+
+No GLUE/BERT checkpoints exist offline, so the paper-fidelity benchmarks
+(Figs. 7-10 analogs) run on small LMs **trained in-framework** on the
+synthetic pipeline (planted bigrams/motifs -> concentrated attention,
+the structure HDP exploits). Two scales mirror the paper's pair:
+
+* ``tiny`` — 2 layers x 2 heads (BERT-Tiny's head count): head pruning
+  must be near-impossible without accuracy loss (paper Fig. 8c/d).
+* ``base`` — 6 layers x 8 heads (48 heads; BERT-Base direction): head
+  pruning should find redundant heads (paper Fig. 8a/b).
+
+Fidelity metrics substitute accuracy (documented in DESIGN.md §1):
+ - top-1 next-token agreement HDP-vs-dense on held-out batches
+   (the "accuracy" axis of every figure analog),
+ - attention-output cosine similarity per layer,
+ - mask IoU vs the Top-K oracle.
+
+Trained params are cached in ``.bench_cache/`` so reruns are fast.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import DataConfig, make_source
+from repro.models import layers as L
+from repro.models import registry
+from repro.training import optimizer as opt
+from repro.training.train_loop import make_train_step
+
+CACHE_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), ".bench_cache")
+
+SEQ = 128
+VOCAB = 512
+
+
+def model_cfg(scale: str) -> ModelConfig:
+    """In-framework stand-ins for the paper's BERT-Tiny / BERT-Base pair."""
+    if scale == "tiny":
+        n_layers, n_heads, d = 2, 2, 128
+    elif scale == "base":
+        n_layers, n_heads, d = 6, 8, 256
+    else:
+        raise ValueError(scale)
+    return ModelConfig(
+        name=f"bench-{scale}", family="dense", n_layers=n_layers,
+        d_model=d, n_heads=n_heads, n_kv_heads=n_heads, d_ff=4 * d,
+        vocab_size=VOCAB, head_dim=d // n_heads, act="gelu",
+        pos_emb="rope", norm="layernorm", dtype="float32", remat=False,
+        attn_chunk=SEQ, hdp=None)
+
+
+def _cache_path(scale: str, steps: int) -> str:
+    return os.path.join(CACHE_DIR, f"{scale}_s{steps}.npz")
+
+
+def train_model(scale: str, steps: int = 400, batch: int = 16,
+                verbose: bool = True) -> Tuple[ModelConfig, Dict]:
+    """Train (or load cached) a small LM; returns (cfg, params)."""
+    cfg = model_cfg(scale)
+    path = _cache_path(scale, steps)
+    params, specs = registry.init_params(cfg, jax.random.PRNGKey(7))
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    if os.path.exists(path):
+        with np.load(path) as z:
+            flat = [jnp.asarray(z[f"p{i}"]) for i in range(len(flat))]
+        return cfg, jax.tree_util.tree_unflatten(treedef, flat)
+
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    dcfg = DataConfig(VOCAB, SEQ, batch, seed=3, kind="synthetic")
+    src = make_source(dcfg)
+    ocfg = opt.OptConfig(peak_lr=1e-3, warmup_steps=20, decay_steps=steps)
+    step_fn = jax.jit(make_train_step(cfg, ocfg))
+    state = opt.init_opt_state(params)
+    t0 = time.time()
+    first = last = None
+    for s in range(steps):
+        tokens = src.batch_at(s)
+        params, state, m = step_fn(params, state, {"tokens": tokens})
+        if s == 0:
+            first = float(m["loss"])
+        last = float(m["loss"])
+        if verbose and s % 100 == 0:
+            print(f"  [{scale}] step {s} loss {last:.3f}", flush=True)
+    if verbose:
+        print(f"  [{scale}] trained {steps} steps in {time.time()-t0:.0f}s "
+              f"loss {first:.3f} -> {last:.3f}", flush=True)
+    flat = jax.tree_util.tree_flatten(params)[0]
+    np.savez(path, **{f"p{i}": np.asarray(x) for i, x in enumerate(flat)})
+    return cfg, params
+
+
+def eval_batches(n: int = 4, batch: int = 8, seed: int = 1234) -> List[np.ndarray]:
+    """Held-out batches (different seed stream than training)."""
+    dcfg = DataConfig(VOCAB, SEQ, batch, seed=seed, kind="synthetic")
+    src = make_source(dcfg)
+    return [src.batch_at(10_000 + i) for i in range(n)]
+
+
+# ------------------------------------------- pluggable-attention forward
+def forward_with_attention(cfg: ModelConfig, params, tokens, attn_fn,
+                           capture: Optional[List] = None) -> jnp.ndarray:
+    """Dense-family forward with attention = ``attn_fn(layer, q, k, v)``.
+
+    q/k/v are [B,H,S,hd]; attn_fn returns the attention output in the same
+    layout. The Python layer loop lets baselines thread cross-layer state
+    (SpAtten-style cascaded head pruning). When ``capture`` is a list, the
+    per-layer {"q","k","v"} dict is appended to it. Logits are asserted
+    against registry.apply_train in tests.
+    """
+    B, S = tokens.shape
+    H, hd = cfg.n_heads, cfg.hd
+    x = L.embed_tokens(params["embed"], tokens, cfg.d_model)
+    for li in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[li], params["layers"])
+        h = L.apply_norm(cfg, lp["ln1"], x)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+        kk = jnp.einsum("bsd,dnk->bsnk", h, lp["attn"]["wk"])
+        vv = jnp.einsum("bsd,dnk->bsnk", h, lp["attn"]["wv"])
+        positions = jnp.arange(S)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        kk = L.apply_rope(kk, positions, cfg.rope_theta)
+        qh = q.transpose(0, 2, 1, 3)        # [B,H,S,hd]
+        kh = kk.transpose(0, 2, 1, 3)
+        vh = vv.transpose(0, 2, 1, 3)
+        if capture is not None:
+            capture.append({"q": qh, "k": kh, "v": vh})
+        o = attn_fn(li, qh, kh, vh)
+        a = jnp.einsum("bshk,hkd->bsd",
+                       o.transpose(0, 2, 1, 3), lp["attn"]["wo"])
+        x = x + a
+        h2 = L.apply_norm(cfg, lp["ln2"], x)
+        x = x + L.mlp_apply(cfg, lp["ffn"], h2)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return L.lm_logits(params["embed"], x)
+
+
+def capture_qkv(cfg: ModelConfig, params, tokens) -> List[Dict[str, jnp.ndarray]]:
+    """Per-layer Q/K/V [B,H,S,hd] under the exact dense forward."""
+    from repro.core.hdp import dense_attention_reference
+    cap: List[Dict[str, jnp.ndarray]] = []
+    forward_with_attention(
+        cfg, params, tokens,
+        lambda li, q, k, v: dense_attention_reference(q, k, v, causal=True),
+        capture=cap)
+    return cap
+
+
+def agreement_with(cfg, params, attn_fn, batches) -> float:
+    """Top-1 agreement of a pluggable-attention forward vs exact dense."""
+    from repro.core.hdp import dense_attention_reference
+    dense = lambda li, q, k, v: dense_attention_reference(  # noqa: E731
+        q, k, v, causal=True)
+    agree = total = 0
+    for b in batches:
+        t = jnp.asarray(b)
+        ad = jnp.argmax(forward_with_attention(cfg, params, t, dense), -1)
+        av = jnp.argmax(forward_with_attention(cfg, params, t, attn_fn), -1)
+        agree += int((ad == av).sum())
+        total += t.size
+    return agree / max(total, 1)
+
+
+def forward_logits(cfg: ModelConfig, params, tokens,
+                   hdp=None) -> jnp.ndarray:
+    """Full forward; hdp=None -> dense, else HDP active in attention."""
+    run_cfg = cfg if hdp is None else cfg.replace(
+        hdp=hdp.replace(enabled=True, apply_in_training=True, causal=True))
+    logits, _ = registry.apply_train(run_cfg, params, {"tokens": tokens})
+    return logits
+
+
+def top1_agreement(cfg, params, hdp, batches) -> float:
+    """Fraction of positions where HDP and dense pick the same next token.
+
+    This is the benchmark's accuracy proxy: on a classification task the
+    accuracy drop is bounded by (1 - agreement)."""
+    agree = total = 0
+    f_dense = jax.jit(lambda t: jnp.argmax(
+        forward_logits(cfg, params, t), -1))
+    f_hdp = jax.jit(lambda t: jnp.argmax(
+        forward_logits(cfg, params, t, hdp), -1))
+    for b in batches:
+        t = jnp.asarray(b)
+        agree += int((f_dense(t) == f_hdp(t)).sum())
+        total += t.size
+    return agree / max(total, 1)
+
+
+def hdp_sparsity(cfg, params, hdp, batches) -> Dict[str, float]:
+    """Mean achieved sparsities over eval batches (uses model-level stats)."""
+    run_cfg = cfg.replace(hdp=hdp.replace(
+        enabled=True, apply_in_training=True, causal=True))
+
+    @jax.jit
+    def stats_of(t):
+        _, extras = registry.apply_train(run_cfg, params, {"tokens": t},
+                                         collect_stats=True)
+        s = extras["hdp"]
+        return (jnp.mean(s["block_sparsity"]), jnp.mean(s["head_sparsity"]))
+
+    bs, hs = [], []
+    for b in batches:
+        x, y = stats_of(jnp.asarray(b))
+        bs.append(float(x))
+        hs.append(float(y))
+    return {"block_sparsity": float(np.mean(bs)),
+            "head_sparsity": float(np.mean(hs))}
+
+
+def cosine(a: jnp.ndarray, b: jnp.ndarray) -> float:
+    a = np.asarray(a, np.float64).ravel()
+    b = np.asarray(b, np.float64).ravel()
+    na, nb = np.linalg.norm(a), np.linalg.norm(b)
+    if na == 0 or nb == 0:
+        return 1.0 if na == nb else 0.0
+    return float(a @ b / (na * nb))

@@ -1,0 +1,82 @@
+"""Fig. 10 analog — net pruning: blocks + heads + approximation together.
+
+Grid over (rho_B, tau_H percentile); net sparsity counts a block skipped
+if its head was pruned OR the block itself was pruned (the paper's
+accounting). Top-K at matched *net* sparsity is the reference: the paper
+reports HDP reaches Top-K-level net sparsity (75% SST2 / 65% CoLA @ -1%)
+because head pruning removes blocks Top-K would keep inside unimportant
+heads.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import topk
+from repro.core.config import HDPConfig
+from repro.core.hdp import hdp_attention
+from benchmarks.head_pruning import theta_head_samples
+
+RHOS = (0.2, 0.4, 0.6, 0.8)
+TAU_PCTS = (0, 10, 25)
+
+
+def _fn(hdp):
+    def fn(li, q, k, v):
+        return hdp_attention(q, k, v, hdp)[0]
+    return fn
+
+
+def _topk_fn(keep, block):
+    def fn(li, q, k, v):
+        return topk.topk_attention(q, k, v, block, block, keep,
+                                   causal=True)[0]
+    return fn
+
+
+def run(scale: str = "base", n_eval: int = 2,
+        train_steps: int = 400) -> List[Dict]:
+    cfg, params = common.train_model(scale, steps=train_steps)
+    batches = common.eval_batches(n_eval)
+    caps = common.capture_qkv(cfg, params, jnp.asarray(batches[0]))
+    base = HDPConfig(rho_b=0.3, block_q=2, block_k=2, approx=True,
+                     head_pruning=True, tau_h=-1.0, causal=True)
+    th = theta_head_samples(cfg, params, batches[:1],
+                            base.replace(block_pruning=False))
+    rows = []
+    for rho in RHOS:
+        for pct in TAU_PCTS:
+            tau = float(np.percentile(th, pct)) if pct else -1.0
+            hdp = base.replace(rho_b=rho, tau_h=tau)
+            ag = common.agreement_with(cfg, params, _fn(hdp), batches)
+            nets = []
+            for c in caps:
+                _, st = hdp_attention(c["q"], c["k"], c["v"], hdp)
+                nets.append(float(st.net_sparsity))
+            rows.append({"method": "hdp", "rho_b": rho, "tau_pct": pct,
+                         "net_sparsity": round(float(np.mean(nets)), 4),
+                         "agreement": round(ag, 4)})
+    for keep in (0.75, 0.5, 0.35, 0.25, 0.15, 0.08):
+        ag = common.agreement_with(cfg, params, _topk_fn(keep, 2), batches)
+        rows.append({"method": "topk", "rho_b": "", "tau_pct": "",
+                     "net_sparsity": round(1 - keep, 4),
+                     "agreement": round(ag, 4)})
+    return rows
+
+
+def main(quick: bool = False) -> List[Dict]:
+    rows = run("base", n_eval=1 if quick else 2,
+               train_steps=200 if quick else 400)
+    print("# net_pruning (Fig.10 analog) scale=base")
+    print("method,rho_b,tau_pct,net_sparsity,agreement")
+    for r in rows:
+        print(f"{r['method']},{r['rho_b']},{r['tau_pct']},"
+              f"{r['net_sparsity']},{r['agreement']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Render the dry-run roofline table (EXPERIMENTS.md §Roofline source).
+
+Reads dryrun_results.json (written by repro.launch.dryrun) and prints the
+per-(arch x shape x mesh) three-term roofline with bottleneck + useful
+ratio. No model execution here — pure reporting.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+DEFAULT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "dryrun_results.json")
+
+
+def load(path: str = DEFAULT) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(results: List[Dict], mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for e in results:
+        if e["mesh"] != mesh:
+            continue
+        if e["status"] == "skip":
+            rows.append({"arch": e["arch"], "shape": e["shape"],
+                         "status": "skip"})
+            continue
+        if e["status"] != "ok":
+            rows.append({"arch": e["arch"], "shape": e["shape"],
+                         "status": "FAIL"})
+            continue
+        r = e["roofline"]
+        dom = r["bottleneck"]
+        dom_t = {"compute": r["compute_t"], "memory": r["memory_t"],
+                 "collective": r["collective_t"]}[dom]
+        rows.append({
+            "arch": e["arch"], "shape": e["shape"], "status": "ok",
+            "compute_ms": round(r["compute_t"] * 1e3, 2),
+            "memory_ms": round(r["memory_t"] * 1e3, 2),
+            "collective_ms": round(r["collective_t"] * 1e3, 2),
+            "bottleneck": dom,
+            "roofline_frac": round(r["compute_t"] / max(dom_t, 1e-12), 3),
+            "useful_ratio": (round(r["useful_ratio"], 3)
+                             if r.get("useful_ratio") else ""),
+            "peak_gb": round(e["memory"]["peak_bytes"] / 1e9, 2),
+            "fits_hbm": e["fits_hbm"],
+        })
+    return rows
+
+
+def main(quick: bool = False, path: str = DEFAULT) -> List[Dict]:
+    results = load(path)
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        rows = table(results, mesh)
+        print(f"# roofline (dry-run, mesh {mesh})")
+        hdr = ["arch", "shape", "status", "compute_ms", "memory_ms",
+               "collective_ms", "bottleneck", "roofline_frac",
+               "useful_ratio", "peak_gb", "fits_hbm"]
+        print(",".join(hdr))
+        for r in rows:
+            print(",".join(str(r.get(h, "")) for h in hdr))
+        out.extend({**r, "mesh": mesh} for r in rows)
+    return out
+
+
+if __name__ == "__main__":
+    main()

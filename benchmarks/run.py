@@ -1,0 +1,99 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+| name           | paper artifact                 |
+|----------------|--------------------------------|
+| block_pruning  | Fig. 7  (HDP vs Top-K)         |
+| head_pruning   | Fig. 8 + Fig. 11 (SpAtten)     |
+| approximation  | Fig. 9                         |
+| net_pruning    | Fig. 10                        |
+| kernels        | kernel correctness + FUM bytes |
+| roofline       | dry-run roofline table (§g)    |
+| serving        | end-to-end engine throughput   |
+
+Accuracy is proxied by top-1 next-token agreement vs the dense model on
+held-out synthetic data (no GLUE checkpoints offline — substitution
+documented in DESIGN.md §1). All output is CSV-ish text; bench_output.txt
+is the canonical artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def bench_serving(quick: bool = False):
+    from repro.launch import serve
+
+    rows = []
+    for arch in ("qwen2-1.5b", "granite-8b"):
+        for no_hdp in (False, True):
+            args = serve.build_parser().parse_args(
+                ["--arch", arch, "--requests", "4" if quick else "8",
+                 "--max-new", "4" if quick else "6"]
+                + (["--no-hdp"] if no_hdp else []))
+            out = serve.run(args)
+            rows.append({"arch": arch, "hdp": not no_hdp, **out})
+    print("# serving (reduced configs, continuous batching)")
+    hdr = list(rows[0].keys())
+    print(",".join(str(h) for h in hdr))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in hdr))
+    return rows
+
+
+BENCHES = {}
+
+
+def _register():
+    from benchmarks import (approximation, block_pruning, decode_roofline,
+                            head_pruning, kernels_bench, net_pruning,
+                            roofline_table)
+    BENCHES.update({
+        "block_pruning": block_pruning.main,
+        "head_pruning": head_pruning.main,
+        "approximation": approximation.main,
+        "net_pruning": net_pruning.main,
+        "kernels": kernels_bench.main,
+        "roofline": roofline_table.main,
+        "decode_roofline": decode_roofline.main,
+        "serving": bench_serving,
+    })
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweeps / fewer eval batches")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args(argv)
+    _register()
+    names = list(BENCHES) if not args.only else args.only.split(",")
+    failures = []
+    for name in names:
+        if name not in BENCHES:
+            print(f"!! unknown benchmark {name}; have {sorted(BENCHES)}")
+            failures.append(name)
+            continue
+        t0 = time.time()
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            BENCHES[name](quick=args.quick)
+            print(f"===== {name} done in {time.time()-t0:.0f}s =====",
+                  flush=True)
+        except Exception:  # noqa: BLE001 — keep the harness going
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED: {failures}")
+        return 1
+    print("\nall benchmarks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

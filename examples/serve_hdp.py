@@ -1,0 +1,65 @@
+"""End-to-end serving driver (the paper's use case is inference).
+
+    PYTHONPATH=src:. python examples/serve_hdp.py
+
+Trains (or loads the cached) small in-framework LM, then serves it with
+**batched requests + continuous batching**, HDP active in prefill and
+decode. Prints an A/B against dense attention: throughput, achieved
+block/head sparsity, the FUM KV-bytes saving that sparsity implies on
+TPU, and generated-token agreement.
+"""
+import argparse
+
+import numpy as np
+
+from benchmarks import common
+from repro.serving import Engine, Request
+from repro.serving.kv_cache import kv_read_bytes_per_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--scale", default="tiny", choices=["tiny", "base"])
+ap.add_argument("--requests", type=int, default=10)
+ap.add_argument("--max-new", type=int, default=8)
+ap.add_argument("--rho-b", type=float, default=-0.5)
+args = ap.parse_args()
+
+cfg, params = common.train_model(args.scale, steps=300)
+from repro.core.config import HDPConfig  # noqa: E402
+
+hdp = HDPConfig(rho_b=args.rho_b, block_q=2, block_k=2, causal=True,
+                head_pruning=True, tau_h=0.0, normalize_head_score=True)
+
+rng = np.random.default_rng(0)
+prompts = [rng.integers(1, cfg.vocab_size, size=int(rng.integers(6, 40)))
+           .tolist() for _ in range(args.requests)]
+
+
+def serve(with_hdp: bool):
+    c = cfg.replace(hdp=hdp) if with_hdp else cfg
+    eng = Engine(c, params=params, max_batch=4, max_len=96,
+                 prefill_buckets=(16, 32, 64), collect_stats=with_hdp)
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, max_new_tokens=args.max_new))
+    res = eng.run()
+    return res, eng.summary()
+
+
+res_hdp, s_hdp = serve(True)
+res_dense, s_dense = serve(False)
+
+agree = np.mean([
+    np.mean(np.asarray(res_hdp[u].tokens) == np.asarray(res_dense[u].tokens))
+    for u in res_hdp])
+dense_b, hdp_b = kv_read_bytes_per_step(
+    cfg, 32768, 1, s_hdp["block_sparsity"])
+
+print(f"\nserving bench-{args.scale} (trained in-framework), "
+      f"{args.requests} requests x {args.max_new} new tokens")
+print(f"  HDP  : {s_hdp.get('decode_tok_s', 0):7.1f} tok/s   "
+      f"block sparsity {s_hdp['block_sparsity']:.2f}  "
+      f"head sparsity {s_hdp['head_sparsity']:.2f}")
+print(f"  dense: {s_dense.get('decode_tok_s', 0):7.1f} tok/s")
+print(f"  generated-token agreement HDP vs dense: {agree:.3f}")
+print(f"  FUM KV-read saving at this sparsity (32k ctx, per seq/step): "
+      f"{dense_b / 1e6:.1f} MB -> {hdp_b / 1e6:.1f} MB "
+      f"({1 - hdp_b / max(dense_b, 1):.0%} less HBM traffic on TPU)")

@@ -1,0 +1,17 @@
+"""HDP core: the paper's contribution as a composable JAX module."""
+from repro.core.config import HDPConfig, PAPER_ASIC, TPU_KERNEL
+from repro.core.hdp import (
+    HDPStats,
+    dense_attention_reference,
+    hdp_attention,
+    hdp_attention_reference,
+)
+from repro.core.quant import int_frac_split, quantize_and_split, quantize_fixed
+from repro.core.topk import mask_agreement, topk_attention, topk_block_mask
+
+__all__ = [
+    "HDPConfig", "PAPER_ASIC", "TPU_KERNEL", "HDPStats",
+    "hdp_attention", "hdp_attention_reference", "dense_attention_reference",
+    "quantize_fixed", "int_frac_split", "quantize_and_split",
+    "topk_block_mask", "topk_attention", "mask_agreement",
+]

@@ -1,0 +1,74 @@
+"""Fixed-point quantization and integer/fraction split (paper Sec. III).
+
+The paper assumes Q/K/V arrive quantized in 16-bit fixed point and bases
+every pruning decision on the *integer parts* only. We keep values in float
+containers but snap them to the fixed-point grid, so the integer/fractional
+decomposition and the scout matmul are exact (int32-representable).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def quantize_fixed(x: jnp.ndarray, int_bits: int = 4, frac_bits: int = 12) -> jnp.ndarray:
+    """Quantize to signed fixed point Q(int_bits).(frac_bits).
+
+    Range is [-2^int_bits, 2^int_bits - 2^-frac_bits]; resolution 2^-frac_bits.
+    Returned values live on the grid but keep x.dtype (float) so downstream
+    matmuls stay on the MXU.
+    """
+    scale = jnp.asarray(2.0**frac_bits, x.dtype)
+    lo = -(2.0**int_bits)
+    hi = 2.0**int_bits - 2.0 ** (-frac_bits)
+    q = jnp.round(x * scale) / scale
+    return jnp.clip(q, lo, hi)
+
+
+def int_frac_split(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Split into integer part (trunc toward zero) and fractional remainder.
+
+    x == I + F with I integer-valued and F in (-1, 1). Near-zero values
+    (|x| < 1) have I == 0 — this is what gives the paper's free near-zero
+    pruning when the F*F term is dropped.
+    """
+    i = jnp.trunc(x)
+    return i, x - i
+
+
+def quantize_and_split(
+    x: jnp.ndarray, int_bits: int = 4, frac_bits: int = 12
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """quantize_fixed followed by int_frac_split; returns (xq, I, F)."""
+    xq = quantize_fixed(x, int_bits, frac_bits)
+    i, f = int_frac_split(xq)
+    return xq, i, f
+
+
+def calib_scale(x: jnp.ndarray, int_bits: int, mode: str) -> jnp.ndarray:
+    """Per-tensor scale mapping x onto the fixed-point grid.
+
+    The paper's co-processor receives Q/K/V already quantized by the host
+    accelerator — i.e. with a calibrated activation scale, exactly like
+    any production int workflow. Modes:
+
+    * ``"max"`` — scale so max|x| hits the grid edge 2^int_bits (classic
+      absmax calibration; keeps integer parts informative).
+    * ``"rms"`` — scale so rms(x) = 2^(int_bits-2) (outlier-robust).
+    * ``"none"`` — identity (paper-literal: values used as-is).
+
+    Scores computed on scaled tensors are divided by s_q*s_k afterwards,
+    so calibration changes only the quantization grid, never the
+    attention semantics.
+    """
+    if mode == "none":
+        return jnp.ones((), jnp.float32)
+    xf = x.astype(jnp.float32)
+    if mode == "max":
+        m = jnp.max(jnp.abs(xf))
+        return (2.0 ** int_bits) * 0.999 / jnp.maximum(m, 1e-6)
+    if mode == "rms":
+        r = jnp.sqrt(jnp.mean(jnp.square(xf)))
+        return (2.0 ** max(int_bits - 2, 0)) / jnp.maximum(r, 1e-6)
+    raise ValueError(f"unknown calibration mode {mode!r}")

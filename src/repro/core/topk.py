@@ -1,0 +1,68 @@
+"""Top-K block pruning baseline (paper Sec. V-A2(a), Fig. 7).
+
+The paper's comparison oracle: per row of blocks, keep exactly the top-k
+blocks by full-precision importance. HDP's threshold rule approximates this
+without sorting hardware; the Fig. 7 analog benchmark measures how well.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import blocking
+
+
+def topk_block_mask(
+    scores: jnp.ndarray,
+    block_q: int,
+    block_k: int,
+    keep_ratio: float,
+    valid: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Keep the top ceil(keep_ratio * C) blocks per block-row.
+
+    scores: full-precision attention scores [..., Lq, Lk].
+    Returns bool keep mask on block geometry [..., R, C].
+    """
+    theta = blocking.block_abs_sum(scores, block_q, block_k)
+    c = theta.shape[-1]
+    k = max(1, int(round(keep_ratio * c)))
+    if valid is not None:
+        theta = jnp.where(valid, theta, -jnp.inf)
+    # threshold = k-th largest per row
+    kth = jnp.sort(theta, axis=-1)[..., c - k : c - k + 1]
+    keep = theta >= kth
+    if valid is not None:
+        keep = jnp.logical_and(keep, valid)
+    return keep
+
+
+def topk_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    block_q: int, block_k: int, keep_ratio: float,
+    *, causal: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact attention with Top-K block pruning; returns (out, keep_blocks)."""
+    scores = jnp.einsum("...qd,...kd->...qk", q, k) / jnp.sqrt(
+        jnp.asarray(q.shape[-1], q.dtype))
+    valid = None
+    if causal:
+        valid = blocking.causal_block_valid(q.shape[-2], k.shape[-2], block_q, block_k)
+    keep = topk_block_mask(scores, block_q, block_k, keep_ratio, valid)
+    keep_elem = blocking.expand_block_mask(keep, block_q, block_k)
+    if causal:
+        keep_elem = jnp.logical_and(
+            keep_elem,
+            blocking.causal_element_mask(q.shape[-2], k.shape[-2]))
+    prob = blocking.masked_softmax(scores, keep_elem)
+    return jnp.einsum("...qk,...kd->...qd", prob, v), keep
+
+
+def mask_agreement(mask_a: jnp.ndarray, mask_b: jnp.ndarray) -> jnp.ndarray:
+    """IoU of two keep masks — the Fig. 7 'does HDP track Top-K' metric."""
+    a = mask_a.astype(jnp.float32)
+    b = mask_b.astype(jnp.float32)
+    inter = (a * b).sum()
+    union = jnp.maximum((jnp.maximum(a, b)).sum(), 1.0)
+    return inter / union

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, MemorizeLM, Prefetcher, SyntheticLM, host_slice, make_source)

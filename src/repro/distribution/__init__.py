@@ -1,0 +1,14 @@
+from repro.distribution.sharding import (
+    RULES_FSDP_TP,
+    RULES_TP,
+    logical_axis_rules,
+    shard_activation,
+    spec_for,
+    tree_specs,
+    zero1_spec,
+)
+
+__all__ = [
+    "RULES_TP", "RULES_FSDP_TP", "logical_axis_rules", "shard_activation",
+    "spec_for", "tree_specs", "zero1_spec",
+]

@@ -1,0 +1,165 @@
+"""Logical-axis sharding rules (MaxText-style) + activation constraints.
+
+Params and activations are annotated with *logical* axis names; a rule set
+maps logical names to physical mesh axes. Models call
+:func:`shard_activation` at layer boundaries; outside a
+:func:`logical_axis_rules` context (unit tests, single device) it is a
+no-op, so models stay mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+# -------------------------------------------------------------------- rules
+# Tensor-parallel default: weights sharded on `model` only; optimizer states
+# additionally ZeRO-1 sharded over `data` (see training/train_loop.py).
+RULES_TP: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "vocab": "model",
+    "embed": None,
+    "table_embed": None,   # vocab-table d_model dim: never FSDP over data
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "layers": None,
+    "groups": None,
+    "state": None,
+    "conv": None,
+    "kv_seq": None,
+    # activation-only axes
+    "heads_act": "model",
+    "mlp_act": "model",
+    "embed_act": None,
+    "seq_act": None,
+    "vocab_act": "model",
+    "experts_act": "model",
+}
+
+# FSDP+TP: large weight matrices additionally sharded over `data` on their
+# embed/replicated dimension (ZeRO-3-like; XLA all-gathers on use).
+RULES_FSDP_TP = dict(RULES_TP, embed=("pod", "data"))
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict[str, Axis]] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Mesh, rules: Dict[str, Axis]):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _physical(axis: Axis, mesh: Mesh, rules: Dict[str, Axis]):
+    if axis is None:
+        return None
+    name = rules.get(axis, None) if isinstance(axis, str) else axis
+    if name is None:
+        return None
+    if isinstance(name, str):
+        return name if name in mesh.axis_names else None
+    present = tuple(a for a in name if a in mesh.axis_names)
+    return present if present else None
+
+
+def spec_for(logical: Sequence[Axis], shape: Sequence[int],
+             mesh: Optional[Mesh] = None,
+             rules: Optional[Dict[str, Axis]] = None) -> P:
+    """Resolve logical axes -> PartitionSpec.
+
+    Drops non-divisible shards, and deduplicates mesh axes across dims
+    (a mesh axis may shard at most one dim; first occurrence wins — e.g.
+    MoE ``(experts, mlp, embed)`` with both experts and mlp -> ``model``
+    resolves to pure expert parallelism).
+    """
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None or rules is None:
+        return P()
+    out = []
+    used: set = set()
+    for dim, ax in zip(shape, logical):
+        phys = _physical(ax, mesh, rules)
+        if phys is None:
+            out.append(None)
+            continue
+        names = (phys,) if isinstance(phys, str) else tuple(phys)
+        names = tuple(a for a in names if a not in used)
+        if not names:
+            out.append(None)
+            continue
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        if dim % size == 0:
+            used.update(names)
+            out.append(names[0] if len(names) == 1 else names)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def tree_specs(params, logical_tree, mesh: Mesh, rules: Dict[str, Axis]):
+    """Map a (params, logical-axes) tree pair to NamedShardings."""
+    def one(p, ax):
+        return NamedSharding(mesh, spec_for(ax, p.shape, mesh, rules))
+    return jax.tree.map(one, params, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, (str, tuple)) for a in x))
+
+
+def shard_activation(x, *logical: Axis):
+    """with_sharding_constraint by logical axes; no-op outside a context."""
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None or rules is None:
+        return x
+    if len(logical) < x.ndim:
+        logical = tuple(logical) + (None,) * (x.ndim - len(logical))
+    spec = spec_for(logical, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def zero1_spec(logical: Sequence[Axis], shape: Sequence[int],
+               mesh: Mesh, rules: Dict[str, Axis]) -> P:
+    """Optimizer-state spec: like the weight but with `data` added on the
+    largest still-unsharded divisible dim (ZeRO-1)."""
+    base = spec_for(logical, shape, mesh, rules)
+    parts = list(base) + [None] * (len(shape) - len(base))
+    if any(p is not None and "data" in (p if isinstance(p, tuple) else (p,))
+           for p in parts):
+        return base
+    dsz = mesh.shape.get("data", 1)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if parts[i] is None and shape[i] % dsz == 0 and shape[i] >= dsz:
+            parts[i] = "data"
+            return P(*parts)
+        if parts[i] is not None:
+            phys = parts[i] if isinstance(parts[i], tuple) else (parts[i],)
+            if "data" not in phys and "model" in phys:
+                sz = dsz * mesh.shape["model"]
+                if shape[i] % sz == 0:
+                    parts[i] = tuple(phys) + ("data",)
+                    return P(*parts)
+    return base

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the HDP hot spots + dense baseline.
+
+Validated in interpret mode on CPU; compiled natively on TPU.
+"""
+from repro.kernels.ops import flash, hdp_attention_tpu
+
+__all__ = ["flash", "hdp_attention_tpu"]

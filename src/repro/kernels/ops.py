@@ -1,0 +1,96 @@
+"""jit'd dispatch wrappers: the full TPU HDP attention pipeline.
+
+``hdp_attention_tpu`` chains the three hardware stages exactly like the
+co-processor's workflow (Sec. IV-A):
+  1. integer scout kernel (PE array + Sparsity Engine) -> theta, keep mask
+  2. early head gate from theta_head (vs tau_H)
+  3. FUM block-sparse attention kernel on surviving blocks/heads
+
+``interpret=None`` auto-selects interpret mode off-TPU so the same code
+path runs in CI (CPU) and production (TPU).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import HDPConfig
+from repro.core.quant import calib_scale, quantize_fixed
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hdp_block_attn import hdp_block_sparse_attention
+from repro.kernels.hdp_scout import hdp_scout
+from repro.kernels.ref import keep_mask_to_indices
+
+F32 = jnp.float32
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def flash(q, k, v, *, causal: bool = True, block_q: int = 128,
+          block_k: int = 128, interpret: Optional[bool] = None):
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k,
+                           interpret=_auto_interpret(interpret))
+
+
+def hdp_attention_tpu(q, k, v, cfg: HDPConfig, *,
+                      max_keep: Optional[int] = None,
+                      interpret: Optional[bool] = None,
+                      return_stats: bool = False):
+    """Full HDP pipeline on TPU tiles. q,k,v [B,H,S,hd].
+
+    max_keep: static cap on kept blocks per row (None -> exact, = nk).
+    """
+    interpret = _auto_interpret(interpret)
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    bq, bk = cfg.block_q, cfg.block_k
+    nk = -(-Sk // bk)
+
+    sq = calib_scale(q, cfg.int_bits, cfg.calib)
+    sk = calib_scale(k, cfg.int_bits, cfg.calib)
+    qq = quantize_fixed(q.astype(F32) * sq, cfg.int_bits, cfg.frac_bits)
+    kq = quantize_fixed(k.astype(F32) * sk, cfg.int_bits, cfg.frac_bits)
+    iq = jnp.trunc(qq)
+    ik = jnp.trunc(kq)
+
+    theta, keep, theta_head = hdp_scout(
+        iq, ik, rho_b=cfg.rho_b, block_q=bq, block_k=bk,
+        causal=cfg.causal, interpret=interpret)
+    if not cfg.block_pruning:
+        keep = jnp.ones_like(keep)
+
+    if cfg.normalize_head_score:
+        if cfg.causal:
+            n_valid = 0.5 * Sq * (Sq + 1) if Sq == Sk else Sq * Sk
+        else:
+            n_valid = Sq * Sk
+        theta_head = theta_head / max(float(n_valid), 1.0)
+    head_kept = (theta_head > cfg.tau_h) if cfg.head_pruning \
+        else jnp.ones_like(theta_head, bool)
+
+    mk = max_keep or nk
+    kv_idx, counts = keep_mask_to_indices(keep, theta, mk)
+
+    out = hdp_block_sparse_attention(
+        qq, kq, v, kv_idx, counts, head_kept,
+        causal=cfg.causal, approx=cfg.approx, block_q=bq, block_k=bk,
+        score_scale=1.0 / (sq * sk), interpret=interpret)
+
+    if not return_stats:
+        return out, None
+    nvalid_blocks = keep.shape[-2] * keep.shape[-1]
+    stats = {
+        "block_sparsity": 1.0 - keep.mean(dtype=F32),
+        "head_sparsity": 1.0 - head_kept.astype(F32).mean(),
+        "kept_blocks_per_row": counts.mean(dtype=F32),
+        "theta_head": theta_head,
+        "total_blocks": nvalid_blocks,
+    }
+    return out, stats

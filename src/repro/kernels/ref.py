@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocking
+from repro.core.quant import int_frac_split
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q,k,v [B,H,S,hd] -> [B,H,S,hd], exact softmax attention."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(F32), k.astype(F32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[2], k.shape[2]), bool))
+        s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(F32)).astype(q.dtype)
+
+
+def hdp_scout_ref(iq, ik, *, block_q: int, block_k: int, rho_b: float,
+                  causal: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                jnp.ndarray]:
+    """Integer scout oracle.
+
+    iq/ik [B,H,S,hd] (integer-valued floats). Returns
+    (theta [B,H,nq,nk], keep mask bool [B,H,nq,nk], theta_head [B,H]).
+    """
+    s = jnp.einsum("bhqd,bhkd->bhqk", iq.astype(F32), ik.astype(F32))
+    lq, lk = iq.shape[2], ik.shape[2]
+    valid = None
+    if causal:
+        valid = blocking.causal_element_mask(lq, lk)
+        s = jnp.where(valid, s, 0.0)
+    theta = blocking.block_abs_sum(s, block_q, block_k)
+    bvalid = None
+    if causal:
+        bvalid = blocking.block_abs_sum(
+            valid.astype(F32), block_q, block_k) > 0
+    thr = blocking.row_threshold(theta, rho_b, bvalid)
+    keep = blocking.block_keep_mask(theta, thr, bvalid)
+    theta_head = jnp.where(bvalid, theta, 0.0).sum((-2, -1)) if causal \
+        else theta.sum((-2, -1))
+    return theta, keep, theta_head
+
+
+def hdp_block_attn_ref(q, k, v, keep, *, block_q: int, block_k: int,
+                       causal: bool = True, approx: bool = True,
+                       head_kept=None) -> jnp.ndarray:
+    """Block-sparse approximate attention oracle.
+
+    q,k,v [B,H,S,hd]; keep bool [B,H,nq,nk]. Scores on surviving blocks are
+    QK^T - FQ FK^T (the paper's 3-term approximation); pruned blocks are
+    excluded from the softmax; pruned heads (head_kept [B,H] bool) output 0.
+    """
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    qf = q.astype(F32)
+    kf = k.astype(F32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if approx:
+        _, fq = int_frac_split(qf)
+        _, fk = int_frac_split(kf)
+        s = s - jnp.einsum("bhqd,bhkd->bhqk", fq, fk)
+    s = s * scale
+    keep_e = blocking.expand_block_mask(keep, block_q, block_k)
+    if causal:
+        keep_e = jnp.logical_and(
+            keep_e, blocking.causal_element_mask(q.shape[2], k.shape[2]))
+    p = blocking.masked_softmax(s, keep_e)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(F32))
+    if head_kept is not None:
+        out = out * head_kept[..., None, None].astype(F32)
+    return out.astype(q.dtype)
+
+
+def keep_mask_to_indices(keep, theta, max_keep: int):
+    """Convert a keep mask to (indices [.., nq, max_keep], counts [.., nq]).
+
+    Rows keeping more than max_keep blocks drop their lowest-theta extras
+    (sorted selection — the static-shape compromise of the TPU kernel;
+    deviation measured in benchmarks). Padded entries point at block 0.
+    """
+    score = jnp.where(keep, theta, -jnp.inf)
+    order = jnp.argsort(-score, axis=-1)[..., :max_keep]       # desc by theta
+    sorted_keep = jnp.take_along_axis(keep, order, axis=-1)
+    counts = sorted_keep.sum(-1).astype(jnp.int32)
+    idx = jnp.where(sorted_keep, order, 0).astype(jnp.int32)
+    # kernel iterates j < count, so re-sort kept indices ascending for
+    # monotone DMA access
+    key = jnp.where(sorted_keep, idx, jnp.iinfo(jnp.int32).max)
+    idx = jnp.sort(key, axis=-1)
+    idx = jnp.where(jnp.arange(max_keep) < counts[..., None], idx, 0)
+    return idx, counts

@@ -1,0 +1,128 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes, print memory/cost analysis, dump roofline JSON.
+
+MUST be run as its own process (the XLA flag above is read at first jax
+init):  PYTHONPATH=src python -m repro.launch.dryrun [--arch a] [--shape s]
+        [--multi-pod/--single-pod/--both] [--out results.json]
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import sys          # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+
+from repro.configs import SHAPES, cell_applicable, get_config, list_configs  # noqa: E402
+from repro.distribution.sharding import logical_axis_rules  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_step  # noqa: E402
+from repro.roofline import analysis  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             step_kwargs=None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.devices.size
+        with mesh, logical_axis_rules(mesh, {}):
+            built = build_step(cfg, shape, mesh, **(step_kwargs or {}))
+            with logical_axis_rules(mesh, built.rules):
+                lowered = built.jitted.lower(*built.args)
+                compiled = lowered.compile()
+                mem = compiled.memory_analysis()
+                roof = analysis.analyze(
+                    compiled,
+                    model_flops_per_device=analysis.model_flops(
+                        cfg, shape, n_dev))
+        rec.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 1),
+            n_devices=n_dev,
+            num_microbatches=built.meta.get("num_microbatches"),
+            memory={
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                "peak_bytes": int(mem.temp_size_in_bytes
+                                  + mem.argument_size_in_bytes
+                                  + mem.output_size_in_bytes
+                                  - mem.alias_size_in_bytes),
+            },
+            roofline=roof.as_dict(),
+            fits_hbm=bool(mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                          + mem.output_size_in_bytes - mem.alias_size_in_bytes
+                          < analysis.HBM_BYTES),
+        )
+        if verbose:
+            m = rec["memory"]
+            r = rec["roofline"]
+            print(f"[{rec['mesh']}] {arch} x {shape_name}: OK "
+                  f"({rec['compile_s']}s) peak={m['peak_bytes']/1e9:.2f}GB "
+                  f"fits={rec['fits_hbm']} flops={r['flops']:.3e} "
+                  f"bottleneck={r['bottleneck']} "
+                  f"(c={r['compute_t']*1e3:.2f}ms m={r['memory_t']*1e3:.2f}ms "
+                  f"l={r['collective_t']*1e3:.2f}ms)", flush=True)
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug, record it
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} x {shape_name}: FAIL {e}",
+                  flush=True)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (default all)")
+    ap.add_argument("--shape", default=None, help="single shape (default all)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(list_configs())
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") == "ok"}
+
+    for multi in meshes:
+        mesh_name = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                if (arch, shape, mesh_name) in done:
+                    continue
+                rec = run_cell(arch, shape, multi_pod=multi)
+                results.append(rec)
+                json.dump(results, open(args.out, "w"), indent=1)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skip (documented), {n_fail} fail")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,464 @@
+"""Unified multi-head attention with HDP as a first-class feature.
+
+Paths (selected by mode/config, all GQA-grouped, fp32 accumulation):
+
+* ``chunked``   — flash-style lax.scan over KV chunks (train / prefill);
+                  memory O(Sq * chunk) instead of O(Sq * Sk).
+* ``local``     — block-local sliding-window attention, cost O(S * w).
+* ``decode``    — single-query attention over a KV cache.
+* ``hdp_*``     — the paper's pipeline, blockwise: integer scout pass ->
+                  row-balanced block mask + early head gate -> approximate
+                  (QK - FQ FK) attention on surviving blocks. Prefill scans
+                  q-blocks twice (scout, attend); decode prunes KV pages.
+
+Tensor conventions: activations x [B, S, D]; q [B, N, G, Sq, hd] where
+N = kv heads, G = query group size (N*G = n_heads); k/v [B, Sk, N, hd].
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocking
+from repro.core.config import HDPConfig
+from repro.core.hdp import calibrated_split
+from repro.distribution.sharding import shard_activation as shd
+from repro.models import layers as L
+
+_NEG = -1e30
+F32 = jnp.float32
+
+
+# ------------------------------------------------------------------ params
+def attn_init(cfg, rng, dtype) -> Tuple[Dict, Dict]:
+    d, h, n, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        "wq": L.dense_init(L.key_for(rng, "wq"), (d, h, hd), dtype),
+        "wk": L.dense_init(L.key_for(rng, "wk"), (d, n, hd), dtype),
+        "wv": L.dense_init(L.key_for(rng, "wv"), (d, n, hd), dtype),
+        "wo": L.dense_init(L.key_for(rng, "wo"), (h, hd, d), dtype, in_axis=-3),
+    }
+    s = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((h, hd), dtype), bk=jnp.zeros((n, hd), dtype),
+                 bv=jnp.zeros((n, hd), dtype))
+        s.update(bq=("heads", "head_dim"), bk=("kv_heads", "head_dim"),
+                 bv=("kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        p.update(q_norm=jnp.ones((hd,), dtype), k_norm=jnp.ones((hd,), dtype))
+        s.update(q_norm=("head_dim",), k_norm=("head_dim",))
+    return p, s
+
+
+# -------------------------------------------------------------- core maths
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad_axis(x, axis, target):
+    pad = target - x.shape[axis]
+    if pad <= 0:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, pad)
+    return jnp.pad(x, w)
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """[..., Sq, Sk] additive bias from position validity."""
+    # include q validity so the mask always carries the full [Sq, Sk]
+    # extent (cross-attention has neither causal nor window terms).
+    valid = (k_pos[..., None, :] >= 0) & (q_pos[..., :, None] >= 0)
+    if causal:
+        valid &= q_pos[..., :, None] >= k_pos[..., None, :]
+    if window:
+        valid &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return valid
+
+
+def chunked_attention(q, k, v, *, q_pos, k_pos, chunk: int,
+                      causal: bool = True, window: int = 0):
+    """Flash-style scan over KV chunks. q [B,N,G,Sq,hd]; k,v [B,Sk,N,hd]."""
+    B, N, G, Sq, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    nc = max(1, -(-Sk // chunk))
+    Skp = nc * chunk
+    k = _pad_axis(k, 1, Skp)
+    v = _pad_axis(v, 1, Skp)
+    k_pos = _pad_axis(k_pos + 1, 0, Skp) - 1  # pads become -1 (invalid)
+
+    kc = k.reshape(B, nc, chunk, N, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, N, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(nc, chunk)
+
+    m0 = jnp.full((B, N, G, Sq), _NEG, F32)
+    l0 = jnp.zeros((B, N, G, Sq), F32)
+    a0 = jnp.zeros((B, N, G, Sq, hd), F32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ki, vi, pi = xs
+        s = jnp.einsum("bngqh,bcnh->bngqc", q, ki,
+                       preferred_element_type=F32) * scale
+        valid = _mask_bias(q_pos, pi, causal, window)
+        s = jnp.where(valid, s, _NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        pv = jnp.einsum("bngqc,bcnh->bngqh", p.astype(v.dtype), vi,
+                        preferred_element_type=F32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def local_attention(q, k, v, *, q_pos, k_pos, window: int, causal: bool = True):
+    """Block-local sliding window: each q block attends self+prev block.
+
+    Requires block size == window; cost O(S * 2w * hd)."""
+    B, N, G, Sq, hd = q.shape
+    Sk = k.shape[1]
+    c = window
+    Sqp, Skp = _ceil_to(Sq, c), _ceil_to(Sk, c)
+    assert Sqp == Skp, "local attention expects aligned q/k (self-attn)"
+    qb = _pad_axis(q, 3, Sqp).reshape(B, N, G, Sqp // c, c, hd)
+    kb = _pad_axis(k, 1, Skp).reshape(B, Skp // c, c, N, hd)
+    vb = _pad_axis(v, 1, Skp).reshape(B, Skp // c, c, N, hd)
+    qp = _pad_axis(q_pos + 1, 0, Sqp).reshape(Sqp // c, c) - 1
+    kp = _pad_axis(k_pos + 1, 0, Skp).reshape(Skp // c, c) - 1
+
+    def pair(x):  # concat previous block: [B, nb, 2c, N, hd]
+        prev = jnp.roll(x, 1, axis=1).at[:, 0].set(0.0)
+        return jnp.concatenate([prev, x], axis=2)
+
+    k2, v2 = pair(kb), pair(vb)
+    kp2 = jnp.concatenate([jnp.roll(kp, 1, 0).at[0].set(-1), kp], axis=1)
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bngtqh,btcnh->bngtqc", qb, k2,
+                   preferred_element_type=F32) * scale
+    valid = _mask_bias(qp, kp2, causal, window)  # [nb, c, 2c]
+    s = jnp.where(valid, s, _NEG)
+    mx = s.max(-1, keepdims=True)
+    p = jnp.exp(s - mx)
+    p = jnp.where(valid, p, 0.0)
+    den = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bngtqc,btcnh->bngtqh", (p / den).astype(v.dtype), v2,
+                     preferred_element_type=F32)
+    out = out.reshape(B, N, G, Sqp, hd)[:, :, :, :Sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k, v, *, q_pos, k_pos, window: int = 0,
+                     causal: bool = True):
+    """Single (or few) query tokens vs cache. q [B,N,G,Sq,hd], k/v [B,Sk,N,hd]."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bngqh,bsnh->bngqs", q, k, preferred_element_type=F32) * scale
+    valid = _mask_bias(q_pos, k_pos, causal, window)
+    s = jnp.where(valid, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid, p, 0.0)
+    out = jnp.einsum("bngqs,bsnh->bngqh", p.astype(v.dtype), v,
+                     preferred_element_type=F32)
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------- HDP path
+def _block_theta(int_scores, valid, bk):
+    """abs-sum block pooling of a [B,N,G,bq,Sk] score slab -> [B,N,G,nk].
+
+    The slab's whole q extent is one block row; `valid` is a positionally
+    broadcastable [..., bq, Sk] validity mask (2-D for shared positions,
+    [B,1,1,bq,Sk] for per-slot decode). Returns (theta, bvalid[..., nk])."""
+    s = jnp.where(valid, int_scores, 0.0)
+    B, N, G, q, Sk = s.shape
+    s = s.reshape(B, N, G, q, Sk // bk, bk)
+    theta = jnp.abs(s).sum(axis=(3, 5))
+    *lead, vq, _ = valid.shape
+    bvalid = valid.reshape(*lead, vq, Sk // bk, bk).any(axis=(-3, -1))
+    return theta, bvalid
+
+
+def hdp_prefill_attention(q, k, v, *, q_pos, k_pos, hdp: HDPConfig,
+                          window: int = 0, return_stats: bool = False):
+    """Two-pass blockwise HDP (Alg. 2 adapted to TPU-sized tiles).
+
+    Pass A: integer scout per q-block -> theta, row threshold, keep mask,
+    head importance. Pass B: approximate attention on surviving blocks.
+    """
+    B, N, G, Sq, hd = q.shape
+    Sk = k.shape[1]
+    bq, bk = hdp.block_q, hdp.block_k
+    Sqp, Skp = _ceil_to(Sq, bq), _ceil_to(Sk, bk)
+    nq, nk = Sqp // bq, Skp // bk
+    scale = 1.0 / (hd ** 0.5)
+
+    sq, qq, iq, fq = calibrated_split(_pad_axis(q, 3, Sqp).astype(F32), hdp)
+    sk, kq, ik, fk = calibrated_split(_pad_axis(k, 1, Skp).astype(F32), hdp)
+    score_rescale = 1.0 / (sq * sk)
+    vp = _pad_axis(v, 1, Skp)
+    qp = _pad_axis(q_pos + 1, 0, Sqp) - 1
+    kp = _pad_axis(k_pos + 1, 0, Skp) - 1
+
+    def per_qblock(x):  # [B,N,G,Sqp,...] -> [nq, B,N,G,bq,...]
+        xs = x.reshape(B, N, G, nq, bq, *x.shape[4:])
+        return jnp.moveaxis(xs, 3, 0)
+
+    iq_b, qq_b, fq_b = per_qblock(iq), per_qblock(qq), per_qblock(fq)
+    qp_b = qp.reshape(nq, bq)
+
+    # ---- Pass A: integer scout -> keep mask, head importance ----
+    def scout(carry, xs):
+        th_acc, n_acc, nb_acc = carry
+        iq_i, qp_i = xs
+        s_int = jnp.einsum("bngqh,bsnh->bngqs", iq_i, ik,
+                           preferred_element_type=F32)
+        valid = _mask_bias(qp_i, kp, hdp.causal, window)
+        theta, bvalid = _block_theta(s_int, valid, bk)
+        if hdp.block_pruning:
+            thr = blocking.row_threshold(theta, hdp.rho_b, bvalid)
+            keep = blocking.block_keep_mask(theta, thr, bvalid)
+        else:
+            keep = jnp.broadcast_to(bvalid, theta.shape)
+        th_acc = th_acc + jnp.where(bvalid, theta, 0.0).sum(-1)
+        n_acc = n_acc + valid.sum().astype(F32)
+        nb_acc = nb_acc + bvalid.sum().astype(F32)
+        return (th_acc, n_acc, nb_acc), keep
+
+    (theta_head, n_valid, n_blocks), keep_rows = jax.lax.scan(
+        scout, (jnp.zeros((B, N, G), F32), jnp.zeros((), F32),
+                jnp.zeros((), F32)), (iq_b, qp_b))
+    if hdp.normalize_head_score:
+        theta_head = theta_head / jnp.maximum(n_valid, 1.0)
+    head_kept = (theta_head > hdp.tau_h) if hdp.head_pruning \
+        else jnp.ones_like(theta_head, bool)
+
+    # ---- Pass B: approximate attention on surviving blocks ----
+    def attend(_, xs):
+        qq_i, fq_i, qp_i, keep_i = xs
+        s = jnp.einsum("bngqh,bsnh->bngqs", qq_i, kq,
+                       preferred_element_type=F32)
+        if hdp.approx:
+            s = s - jnp.einsum("bngqh,bsnh->bngqs", fq_i, fk,
+                               preferred_element_type=F32)
+        s = s * (scale * score_rescale)
+        valid = _mask_bias(qp_i, kp, hdp.causal, window)
+        keep_e = jnp.repeat(keep_i, bk, axis=-1)[..., None, :] & valid
+        s = jnp.where(keep_e, s, _NEG)
+        softmax = blocking.approx_softmax if hdp.approx_softmax else None
+        if softmax is not None:
+            p = softmax(s, keep_e)
+        else:
+            mx = s.max(-1, keepdims=True)
+            p = jnp.exp(s - mx)
+            p = jnp.where(keep_e, p, 0.0)
+            p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+        o = jnp.einsum("bngqs,bsnh->bngqh", p.astype(vp.dtype), vp,
+                       preferred_element_type=F32)
+        return (), o
+
+    _, outs = jax.lax.scan(attend, (), (qq_b, fq_b, qp_b, keep_rows))
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, N, G, Sqp, hd)[:, :, :, :Sq]
+    out = out * head_kept[..., None, None].astype(out.dtype)
+
+    stats = None
+    if return_stats:
+        kept = keep_rows.astype(F32).sum() / (B * N * G)
+        stats = {
+            "block_sparsity": 1.0 - kept / jnp.maximum(n_blocks, 1.0),
+            "head_sparsity": 1.0 - head_kept.astype(F32).mean(),
+            "theta_head": theta_head,
+        }
+    return out.astype(q.dtype), stats
+
+
+def hdp_decode_attention(q, k, v, *, q_pos, k_pos, hdp: HDPConfig,
+                         window: int = 0, return_stats: bool = False):
+    """KV-page pruning for decode (TPU adaptation, DESIGN.md §2).
+
+    The integer scout reads K (int8-representable) once; pruned pages'
+    V (and full-precision K) never need fetching — the memory-roofline win.
+    """
+    B, N, G, Sq, hd = q.shape
+    Sk = k.shape[1]
+    bk = hdp.block_k
+    Skp = _ceil_to(Sk, bk)
+    scale = 1.0 / (hd ** 0.5)
+
+    sq, qq, iq, fq = calibrated_split(q.astype(F32), hdp)
+    sk, kq, ik, fk = calibrated_split(_pad_axis(k, 1, Skp).astype(F32), hdp)
+    score_rescale = 1.0 / (sq * sk)
+    vp = _pad_axis(v, 1, Skp)
+    kp = _pad_axis(k_pos + 1, -1 if k_pos.ndim > 1 else 0, Skp) - 1
+
+    s_int = jnp.einsum("bngqh,bsnh->bngqs", iq, ik, preferred_element_type=F32)
+    valid = _mask_bias(q_pos, kp, hdp.causal, window)
+    # the (small) query group is pooled into one block row per head
+    theta, bvalid = _block_theta(s_int, valid, bk)
+    if hdp.block_pruning:
+        thr = blocking.row_threshold(theta, hdp.rho_b, bvalid)
+        keep = blocking.block_keep_mask(theta, thr, bvalid)
+    else:
+        keep = bvalid
+    theta_head = jnp.where(bvalid, theta, 0.0).sum(-1)
+    if hdp.normalize_head_score:
+        theta_head = theta_head / jnp.maximum(
+            valid.sum(axis=(-2, -1)).astype(F32), 1.0)
+    head_kept = (theta_head > hdp.tau_h) if hdp.head_pruning \
+        else jnp.ones_like(theta_head, bool)
+
+    s = jnp.einsum("bngqh,bsnh->bngqs", qq, kq, preferred_element_type=F32)
+    if hdp.approx:
+        s = s - jnp.einsum("bngqh,bsnh->bngqs", fq, fk,
+                           preferred_element_type=F32)
+    s = s * (scale * score_rescale)
+    keep_e = jnp.repeat(keep, bk, axis=-1)[..., None, :] & valid
+    s = jnp.where(keep_e, s, _NEG)
+    mx = s.max(-1, keepdims=True)
+    p = jnp.exp(s - mx)
+    p = jnp.where(keep_e, p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bngqs,bsnh->bngqh", p.astype(vp.dtype), vp,
+                     preferred_element_type=F32)
+    out = out * head_kept[..., None, None].astype(out.dtype)
+
+    stats = None
+    if return_stats:
+        kept = (keep & bvalid).astype(F32).sum() / (B * N * G)
+        tot = jnp.maximum(bvalid.astype(F32).sum(), 1.0)
+        stats = {"block_sparsity": 1.0 - kept / tot,
+                 "head_sparsity": 1.0 - head_kept.astype(F32).mean(),
+                 "theta_head": theta_head}
+    return out.astype(q.dtype), stats
+
+
+# --------------------------------------------------------------- full layer
+def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
+               enc_out=None, causal: bool = True, static_cache: bool = False,
+               collect_stats: bool = False) -> Tuple[Any, Any, Any]:
+    """Full MHA layer: project, rope, (HDP-)attend, output-project.
+
+    mode: train | prefill | decode. cache: {"k","v"} [B,Smax,N,hd] (+ pos
+    handled by caller passing `positions`). enc_out: cross-attention keys
+    source (whisper decoder prefill); static_cache: attend to the cache
+    as-is without writing (whisper cross-attn at decode).
+    Returns (y, new_cache, stats|None).
+
+    NOTE (perf log B3): writing K/V into the *stacked* [L,B,S,N,hd] cache
+    before reading (to dodge the per-layer carry copy) was measured and
+    REFUTED — two dynamic indices on a sequence-sharded buffer make the
+    SPMD partitioner reshard the cache to replicated (memory_t 0.33 s ->
+    2.6 s). The per-layer slice+update carry in transformer._stack is the
+    best measured point.
+    """
+    B, S, D = x.shape
+    H, N, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // N
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"])
+    q = shd(q, "batch", "seq_act", "heads_act", None)
+    if cfg.pos_emb == "rope" and enc_out is None and not static_cache:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if static_cache:
+        # cross-attention at decode: keys were cached at prefill
+        k_full, v_full = cache["k"], cache["v"]
+        k_pos = jnp.arange(k_full.shape[1])
+    else:
+        kv_src = enc_out if enc_out is not None else x
+        k = jnp.einsum("bsd,dnk->bsnk", kv_src, p["wk"])
+        v = jnp.einsum("bsd,dnk->bsnk", kv_src, p["wv"])
+        if cfg.qkv_bias:
+            k, v = k + p["bk"], v + p["bv"]
+        if cfg.qk_norm:
+            k = L.rms_norm(k, p["k_norm"])
+        k = shd(k, "batch", "seq_act", "kv_heads", None)
+        if cfg.pos_emb == "rope" and enc_out is None:
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+
+        if cache is not None:
+            if positions.ndim == 2 and enc_out is None:
+                # per-slot positions (continuous batching): each sequence
+                # writes its cache at its own offset
+                def upd(c, kv, p0):
+                    return jax.lax.dynamic_update_slice_in_dim(c, kv, p0, 0)
+                new_cache = {
+                    "k": jax.vmap(upd)(cache["k"], k.astype(cache["k"].dtype),
+                                       positions[:, 0]),
+                    "v": jax.vmap(upd)(cache["v"], v.astype(cache["v"].dtype),
+                                       positions[:, 0]),
+                }
+                k_full, v_full = new_cache["k"], new_cache["v"]
+                ar = jnp.arange(k_full.shape[1])
+                k_pos = jnp.where(ar[None, :] <= positions[:, -1:], ar, -1)
+                k_pos = k_pos[:, None, None, :]          # [B,1,1,Smax]
+            else:
+                pos0 = positions[0] if enc_out is None else 0
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice_in_dim(
+                        cache["k"], k.astype(cache["k"].dtype), pos0, 1),
+                    "v": jax.lax.dynamic_update_slice_in_dim(
+                        cache["v"], v.astype(cache["v"].dtype), pos0, 1),
+                }
+                k_full, v_full = new_cache["k"], new_cache["v"]
+                k_pos = jnp.arange(k_full.shape[1])
+                if enc_out is None:
+                    k_pos = jnp.where(k_pos <= positions[-1], k_pos, -1)
+        else:
+            k_full, v_full = k, v
+            k_pos = (jnp.arange(k.shape[1]) if enc_out is not None
+                     else positions)
+
+    qg = q.reshape(B, S, N, G, hd).transpose(0, 2, 3, 1, 4)  # [B,N,G,S,hd]
+    # per-slot positions carry a batch dim; align it with [B,N,G,Sq,Sk]
+    q_pos = positions[:, None, None, :] if positions.ndim == 2 else positions
+
+    hdp = cfg.hdp
+    use_hdp = (hdp is not None and hdp.enabled
+               and (mode != "train" or hdp.apply_in_training))
+    stats = None
+    is_cross = enc_out is not None or static_cache
+    if use_hdp:
+        hdp = hdp.replace(causal=causal and not is_cross)
+        if mode == "decode":
+            o, stats = hdp_decode_attention(
+                qg, k_full, v_full, q_pos=q_pos, k_pos=k_pos, hdp=hdp,
+                window=cfg.sliding_window, return_stats=collect_stats)
+        else:
+            o, stats = hdp_prefill_attention(
+                qg, k_full, v_full, q_pos=q_pos, k_pos=k_pos, hdp=hdp,
+                window=cfg.sliding_window, return_stats=collect_stats)
+    elif mode == "decode":
+        o = decode_attention(qg, k_full, v_full, q_pos=q_pos, k_pos=k_pos,
+                             window=0 if is_cross else cfg.sliding_window,
+                             causal=not is_cross)
+    elif cfg.sliding_window and not is_cross and S > cfg.sliding_window:
+        o = local_attention(qg, k_full, v_full, q_pos=q_pos, k_pos=k_pos,
+                            window=cfg.sliding_window, causal=causal)
+    else:
+        o = chunked_attention(qg, k_full, v_full, q_pos=q_pos, k_pos=k_pos,
+                              chunk=min(cfg.attn_chunk, max(k_full.shape[1], 1)),
+                              causal=causal and not is_cross,
+                              window=0 if is_cross else cfg.sliding_window)
+
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    y = shd(y, "batch", "seq_act", "embed_act")
+    return y, new_cache, stats

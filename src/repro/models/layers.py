@@ -1,0 +1,182 @@
+"""Common pure-JAX building blocks (no flax).
+
+Every ``*_init`` returns ``(params, specs)`` where ``specs`` mirrors the
+param tree with tuples of *logical axis names* — resolved to PartitionSpec
+by distribution.sharding. Building both trees in one place keeps them
+structurally identical by construction (asserted in tests).
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+def key_for(rng: jax.Array, name: str) -> jax.Array:
+    return jax.random.fold_in(rng, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+
+def dense_init(rng, shape, dtype, in_axis: int = 0, scale: float = 1.0):
+    fan_in = 1
+    for a in (shape[in_axis:-1] if in_axis >= 0 else shape[:-1]):
+        fan_in *= a
+    fan_in = max(fan_in, 1)
+    std = scale / (fan_in ** 0.5)
+    return (std * jax.random.truncated_normal(rng, -2.0, 2.0, shape)).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt((x * x).mean(-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm_init(cfg, dtype) -> Tuple[Params, Specs]:
+    if cfg.norm == "layernorm":
+        return ({"w": jnp.ones((cfg.d_model,), dtype),
+                 "b": jnp.zeros((cfg.d_model,), dtype)},
+                {"w": ("embed",), "b": ("embed",)})
+    return ({"w": jnp.ones((cfg.d_model,), dtype)}, {"w": ("embed",)})
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["w"], p["b"])
+    return rms_norm(x, p["w"])
+
+
+def group_norm_heads(x, w, b, eps=1e-5):
+    """Per-head group norm for RWKV: x [..., H, hd]."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------- position codes
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: [S] or [..., S] (absolute)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], -1).astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d: int, offset=0) -> jnp.ndarray:
+    pos = (jnp.arange(seq, dtype=jnp.float32) + offset)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, dim / d)
+    out = jnp.zeros((seq, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang[:, : (d - d // 2)]))
+    return out
+
+
+# --------------------------------------------------------------------- MLPs
+def mlp_init(cfg, rng, dtype) -> Tuple[Params, Specs]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "silu_glu":
+        p = {"w_gate": dense_init(key_for(rng, "w_gate"), (d, f), dtype),
+             "w_up": dense_init(key_for(rng, "w_up"), (d, f), dtype),
+             "w_down": dense_init(key_for(rng, "w_down"), (f, d), dtype)}
+        s = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+             "w_down": ("mlp", "embed")}
+    elif cfg.act in ("gelu", "relu2"):
+        p = {"w1": dense_init(key_for(rng, "w1"), (d, f), dtype),
+             "w2": dense_init(key_for(rng, "w2"), (f, d), dtype)}
+        s = {"w1": ("embed", "mlp"), "w2": ("mlp", "embed")}
+        if cfg.act == "gelu":  # whisper-style biases
+            p["b1"] = jnp.zeros((f,), dtype)
+            p["b2"] = jnp.zeros((d,), dtype)
+            s["b1"] = ("mlp",)
+            s["b2"] = ("embed",)
+    else:
+        raise ValueError(f"unknown act {cfg.act}")
+    return p, s
+
+
+def mlp_apply(cfg, p, x):
+    from repro.distribution.sharding import shard_activation as shd
+    if cfg.act == "silu_glu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = shd(h, "batch", None, "mlp_act")
+        return h @ p["w_down"]
+    h = x @ p["w1"]
+    if cfg.act == "gelu":
+        h = jax.nn.gelu(h + p["b1"], approximate=True)
+        h = shd(h, "batch", None, "mlp_act")
+        return h @ p["w2"] + p["b2"]
+    # relu2 (nemotron-4): squared ReLU, no bias
+    h = jnp.square(jax.nn.relu(h))
+    h = shd(h, "batch", None, "mlp_act")
+    return h @ p["w2"]
+
+
+# --------------------------------------------------------------- embeddings
+def embed_init(cfg, rng, dtype) -> Tuple[Params, Specs]:
+    # the d_model dim of the vocab tables uses `table_embed` (never
+    # FSDP-sharded over data): data-sharding it makes the logits matmul
+    # all-gather a full [d, vocab] f32 table per device, which XLA then
+    # hoists into the loop carry — 4 GB live for a 200k vocab. The
+    # vocab->model sharding already splits the table 16-way.
+    p = {"tok": dense_init(key_for(rng, "tok_embed"),
+                           (cfg.vocab_size, cfg.d_model), dtype, scale=1.0)}
+    s = {"tok": ("vocab", "table_embed")}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(key_for(rng, "lm_head"),
+                                  (cfg.d_model, cfg.vocab_size), dtype)
+        s["lm_head"] = ("table_embed", "vocab")
+    return p, s
+
+
+def embed_tokens(p, tokens, d_model):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def lm_logits(p, x):
+    w = p.get("lm_head")
+    if w is None:
+        w = p["tok"].T
+    return (x @ w).astype(jnp.float32)
+
+
+def lm_logits_sharded(p, x):
+    """Final-projection logits with the vocab dim kept on `model`.
+
+    When activations are sequence-sharded over `model` (head-indivisible
+    archs, prefill context parallelism) the vocab dim would lose its mesh
+    axis and the lm_head matmul + its grad materialize FULL [d, vocab]
+    f32 buffers with 4 GB all-reduces. Regrouping the (cheap, [B,S,D]
+    bf16) activations first keeps all vocab math model-sharded.
+    """
+    from repro.distribution.sharding import shard_activation as shd
+    x = shd(x, "batch", None, "embed_act")
+    logits = lm_logits(p, x)
+    return shd(logits, "batch", None, "vocab_act")

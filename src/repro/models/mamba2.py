@@ -1,0 +1,185 @@
+"""Mamba2 (SSD) layer — used by the zamba2 hybrid.
+
+State-space recurrence per head: S[P,N] updated as
+``S_t = exp(dt_t A) S_{t-1} + dt_t x_t (x) B_t``, output ``y_t = S_t C_t``.
+Attention-free: HDP does not apply to these blocks (DESIGN.md
+§Arch-applicability). Causal depthwise conv (width 4) on the input branch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+F32 = jnp.float32
+
+
+def d_inner(cfg) -> int:
+    return 2 * cfg.d_model
+
+
+def n_ssm_heads(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def layer_init(cfg, rng, dtype) -> Tuple[Dict, Dict]:
+    d, di, n, h = cfg.d_model, d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg)
+    p = {
+        "Wz": L.dense_init(L.key_for(rng, "Wz"), (d, di), dtype),
+        "Wx": L.dense_init(L.key_for(rng, "Wx"), (d, di), dtype),
+        "WB": L.dense_init(L.key_for(rng, "WB"), (d, n), dtype),
+        "WC": L.dense_init(L.key_for(rng, "WC"), (d, n), dtype),
+        "Wdt": L.dense_init(L.key_for(rng, "Wdt"), (d, h), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "A_log": jnp.zeros((h,), F32),
+        "D_skip": jnp.ones((h,), dtype),
+        "conv_w": 0.1 * jnp.ones((cfg.ssm_conv, di), dtype),
+        "norm_w": jnp.ones((di,), dtype),
+        "Wo": L.dense_init(L.key_for(rng, "Wo"), (di, d), dtype),
+    }
+    s = {
+        "Wz": ("embed", "mlp"), "Wx": ("embed", "mlp"),
+        "WB": ("embed", "state"), "WC": ("embed", "state"),
+        "Wdt": ("embed", "heads"), "dt_bias": ("heads",),
+        "A_log": ("heads",), "D_skip": ("heads",),
+        "conv_w": ("conv", "mlp"), "norm_w": ("mlp",),
+        "Wo": ("mlp", "embed"),
+    }
+    return p, s
+
+
+def _causal_conv(x, w, conv_state: Optional[jnp.ndarray]):
+    """Depthwise causal conv via shifted adds. x [B,T,di]; w [W,di].
+
+    conv_state: [B,W-1,di] trailing inputs from the previous segment (or
+    zeros). Returns (y, new_conv_state)."""
+    W = w.shape[0]
+    B, T, di = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, di), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)  # [B, T+W-1, di]
+    y = sum(xp[:, i : i + T] * w[i] for i in range(W))
+    new_state = jax.lax.dynamic_slice_in_dim(xp, xp.shape[1] - (W - 1), W - 1, 1)
+    return y, new_state
+
+
+def _ssd_scan(xh, dt, decay, Bm, Cm, s0):
+    """Per-timestep reference recurrence (oracle; O(T) sequential).
+
+    xh [B,T,H,P]; dt,decay [B,T,H]; Bm,Cm [B,T,N]; s0 [B,H,P,N]."""
+    def step(S, xs):
+        xt, dtt, at, bt, ct = xs
+        S = at[..., None, None] * S + jnp.einsum(
+            "bhp,bn->bhpn", xt * dtt[..., None], bt)
+        y = jnp.einsum("bhpn,bn->bhp", S, ct)
+        return S, y
+
+    xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(decay, 1, 0), jnp.moveaxis(Bm, 1, 0),
+          jnp.moveaxis(Cm, 1, 0))
+    S, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), S
+
+
+def _ssd_chunked(xh, dt, log_decay, Bm, Cm, s0, chunk: int):
+    """SSD chunked dual form (Mamba2's own parallel algorithm).
+
+    Processes T in chunks of L: intra-chunk contributions are an O(L^2)
+    masked matmul (MXU-friendly), the state is carried across chunks —
+    the per-timestep scan saves [T,B,H,P,N] carries for the backward
+    pass (7.5 GB/layer at T=4k for zamba2), the chunked form saves only
+    [T/L,...]. Decay ratios use log-space cumsums (dt*A <= 0, so every
+    exp() argument is <= 0 — no overflow).
+
+    xh [B,T,H,P]; dt [B,T,H]; log_decay = dt*A [B,T,H] (<= 0);
+    Bm,Cm [B,T,N]; s0 [B,H,P,N]. Returns (y [B,T,H,P], S_final).
+    """
+    B, T, H, P = xh.shape
+    N = Bm.shape[-1]
+    L = min(chunk, T)
+    if T % L:
+        raise ValueError(f"T={T} not divisible by ssd chunk {L}")
+    nc = T // L
+
+    def per_chunk(x):  # [B,T,...] -> [nc,B,L,...]
+        return jnp.moveaxis(x.reshape(B, nc, L, *x.shape[2:]), 1, 0)
+
+    xs = (per_chunk(xh), per_chunk(dt), per_chunk(log_decay),
+          per_chunk(Bm), per_chunk(Cm))
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(S, xs_c):
+        xc, dtc, ldc, bc, cc = xs_c           # [B,L,H,P],[B,L,H],...,[B,L,N]
+        lcum = jnp.cumsum(ldc, axis=1)        # [B,L,H] log prod a_1..a_t
+        # inter-chunk: y_t += exp(lcum_t) * (S_0 . C_t)
+        y0 = jnp.einsum("bhpn,bln->blhp", S, cc)
+        y = y0 * jnp.exp(lcum)[..., None]
+        # intra-chunk: G[t,j] = exp(lcum_t - lcum_j) dt_j (C_t.B_j), j<=t
+        cb = jnp.einsum("bln,bjn->blj", cc, bc)            # [B,L,L]
+        ratio = jnp.exp(jnp.clip(lcum[:, :, None] - lcum[:, None, :],
+                                 None, 0.0))               # [B,L,L,H]
+        g = cb[..., None] * ratio * dtc[:, None]           # [B,L(t),L(j),H]
+        g = jnp.where(mask[None, :, :, None], g, 0.0)
+        y = y + jnp.einsum("bljh,bjhp->blhp", g, xc)
+        # carry: S_L = exp(lcum_L) S_0 + sum_j exp(lcum_L - lcum_j) dt_j x_j B_j
+        wj = jnp.exp(lcum[:, -1:, :] - lcum) * dtc         # [B,L,H]
+        S = S * jnp.exp(lcum[:, -1])[..., None, None] + jnp.einsum(
+            "blhp,bln->bhpn", xc * wj[..., None], bc)
+        return S, y
+
+    S, ys = jax.lax.scan(chunk_step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, P)
+    return y, S
+
+
+def layer_apply(cfg, p, x, cache: Optional[Dict]) -> Tuple[jnp.ndarray, Dict]:
+    """x [B,T,D] -> (y [B,T,D], new_cache {"S","conv"})."""
+    B, T, D = x.shape
+    di, N, H, P = d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg), cfg.ssm_head_dim
+
+    z = x @ p["Wz"]
+    xi = x @ p["Wx"]
+    conv_state = cache["conv"] if cache is not None else None
+    xi, new_conv = _causal_conv(xi, p["conv_w"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    dt = jax.nn.softplus((x @ p["Wdt"] + p["dt_bias"]).astype(F32))
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                   # [B,T,H]
+    Bm = (x @ p["WB"]).astype(F32)
+    Cm = (x @ p["WC"]).astype(F32)
+    xh = xi.reshape(B, T, H, P).astype(F32)
+
+    s0 = cache["S"] if cache is not None else jnp.zeros((B, H, P, N), F32)
+    chunk = getattr(cfg, "ssm_chunk", 128)
+    if T > 1 and T % min(chunk, T) == 0:
+        y, S = _ssd_chunked(xh, dt, dt * A, Bm, Cm, s0.astype(F32), chunk)
+    else:
+        y, S = _ssd_scan(xh, dt, decay, Bm, Cm, s0.astype(F32))
+    y = y + p["D_skip"].astype(F32)[None, None, :, None] * xh
+    y = y.reshape(B, T, di).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    out = y @ p["Wo"]
+    new_cache = {"S": S, "conv": new_conv}
+    return out, new_cache
+
+
+def init_cache(cfg, batch: int, dtype=None) -> Dict:
+    di, N, H, P = d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg), cfg.ssm_head_dim
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return {"S": jnp.zeros((batch, H, P, N), F32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dt)}
+
+
+def cache_specs() -> Dict:
+    return {"S": ("batch", "heads", None, None),
+            "conv": ("batch", None, "mlp_act")}
+
+
+def param_count(cfg) -> int:
+    d, di, n, h = cfg.d_model, d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg)
+    return (2 * d * di + 2 * d * n + d * h + 3 * h
+            + cfg.ssm_conv * di + di + di * d)

@@ -1,0 +1,128 @@
+"""Family dispatch: one uniform API over all architectures.
+
+  init_params(cfg, rng)        -> (params, logical_specs)
+  apply_train(cfg, p, batch)   -> (logits, {"aux_loss", "hdp"})
+  init_cache(cfg, B, max_len)  -> cache pytree
+  cache_specs(cfg)             -> logical specs for the cache
+  apply_prefill / apply_decode -> serving steps
+  input_specs(cfg, shape)      -> ShapeDtypeStruct stand-ins (dry-run)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import rwkv6, transformer, whisper, zamba2
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "rwkv6": rwkv6,
+    "zamba2": zamba2,
+    "whisper": whisper,
+}
+
+
+def module_for(cfg: ModelConfig):
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise KeyError(f"unknown family {cfg.family!r}") from None
+
+
+def init_params(cfg, rng):
+    return module_for(cfg).init_params(cfg, rng)
+
+
+def abstract_params(cfg, rng=None):
+    """eval_shape'd params — no device allocation (dry-run path)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(
+        lambda r: module_for(cfg).init_params(cfg, r)[0], rng)
+    return shapes, param_specs(cfg)
+
+
+def param_specs(cfg):
+    """Logical specs tree (no array allocation — mirrors init structure)."""
+    rng = jax.random.PRNGKey(0)
+    # init under eval_shape so nothing is materialized; specs are static.
+    out = {}
+
+    def capture(r):
+        p, s = module_for(cfg).init_params(cfg, r)
+        out["specs"] = s
+        return p
+
+    jax.eval_shape(capture, rng)
+    return out["specs"]
+
+
+def apply_train(cfg, params, batch, **kw):
+    return module_for(cfg).apply_train(cfg, params, batch, **kw)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None, **kw):
+    return module_for(cfg).init_cache(cfg, batch, max_len, dtype=dtype, **kw)
+
+
+def cache_specs(cfg):
+    m = module_for(cfg)
+    try:
+        return m.cache_specs(cfg)
+    except TypeError:
+        return m.cache_specs()
+
+
+def apply_prefill(cfg, params, batch, cache, **kw):
+    return module_for(cfg).apply_prefill(cfg, params, batch, cache, **kw)
+
+
+def apply_decode(cfg, params, token, cache, pos, **kw):
+    return module_for(cfg).apply_decode(cfg, params, token, cache, pos, **kw)
+
+
+def param_count(cfg, active_only: bool = False) -> int:
+    m = module_for(cfg)
+    if active_only and hasattr(m, "active_param_count"):
+        return m.active_param_count(cfg)
+    return m.param_count(cfg)
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:   {"batch": {"tokens" [B,S]} (+frames for audio)}
+    prefill: {"batch": {...}}
+    decode:  {"token" [B,1], "pos" scalar}  (cache specs come from
+             init_cache via eval_shape in the dry-run)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    tok = lambda *s: jax.ShapeDtypeStruct(s, i32)
+    act = lambda *s: jax.ShapeDtypeStruct(s, jnp.dtype(cfg.dtype))
+
+    if cfg.is_encoder_decoder:
+        dec_len = max(S // 8, 8)
+        if shape.kind == "train":
+            return {"batch": {"frames": act(B, S, cfg.d_model),
+                              "tokens": tok(B, dec_len)}}
+        if shape.kind == "prefill":
+            return {"batch": {"frames": act(B, S, cfg.d_model),
+                              "tokens": tok(B, dec_len)}}
+        return {"token": tok(B, 1), "pos": jax.ShapeDtypeStruct((), i32)}
+
+    if shape.kind in ("train", "prefill"):
+        return {"batch": {"tokens": tok(B, S)}}
+    return {"token": tok(B, 1), "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def decode_cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """KV length the decode cell must hold (ring-buffered for SWA)."""
+    if cfg.sliding_window:
+        return min(shape.seq_len, max(cfg.sliding_window * 2, 16))
+    return shape.seq_len

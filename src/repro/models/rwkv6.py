@@ -1,0 +1,219 @@
+"""RWKV-6 "Finch" — attention-free LM with data-dependent decay.
+
+HDP is inapplicable here (no QK^T score matrix exists — DESIGN.md
+§Arch-applicability); the arch is implemented without it, as assigned.
+
+Per layer: time-mix block (token shift, data-dependent decay w via LoRA,
+WKV linear-attention recurrence with per-head state S[hd_k, hd_v], bonus u,
+per-head group norm, gating) + channel-mix block (token shift, squared-ReLU
+key, sigmoid receptance). Recurrence runs as lax.scan over time for train /
+prefill and as a single state update for decode.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import shard_activation as shd
+from repro.models import layers as L
+
+F32 = jnp.float32
+LORA_R = 64
+
+
+def _tm_init(cfg, rng, dtype) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    h = d // cfg.ssm_head_dim
+    hd = cfg.ssm_head_dim
+    names = ("r", "k", "v", "w", "g")
+    p = {f"mu_{n}": jnp.full((d,), 0.5, dtype) for n in names}
+    s = {f"mu_{n}": ("embed",) for n in names}
+    for n in ("r", "k", "v", "g", "o"):
+        p[f"W{n}"] = L.dense_init(L.key_for(rng, f"W{n}"), (d, d), dtype)
+        s[f"W{n}"] = ("embed", "heads") if n != "o" else ("heads", "embed")
+    p["w0"] = jnp.full((d,), -5.0, dtype)                 # decay bias
+    p["wA"] = L.dense_init(L.key_for(rng, "wA"), (d, LORA_R), dtype)
+    p["wB"] = L.dense_init(L.key_for(rng, "wB"), (LORA_R, d), dtype, scale=0.1)
+    p["u"] = jnp.zeros((h, hd), dtype)                    # bonus
+    p["gn_w"] = jnp.ones((h, hd), dtype)
+    p["gn_b"] = jnp.zeros((h, hd), dtype)
+    s.update(w0=("embed",), wA=("embed", None), wB=(None, "embed"),
+             u=("heads", "head_dim"), gn_w=("heads", "head_dim"),
+             gn_b=("heads", "head_dim"))
+    return p, s
+
+
+def _cm_init(cfg, rng, dtype) -> Tuple[Dict, Dict]:
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"mu_k": jnp.full((d,), 0.5, dtype),
+         "mu_r": jnp.full((d,), 0.5, dtype),
+         "Wk": L.dense_init(L.key_for(rng, "cWk"), (d, f), dtype),
+         "Wv": L.dense_init(L.key_for(rng, "cWv"), (f, d), dtype),
+         "Wr": L.dense_init(L.key_for(rng, "cWr"), (d, d), dtype)}
+    s = {"mu_k": ("embed",), "mu_r": ("embed",), "Wk": ("embed", "mlp"),
+         "Wv": ("mlp", "embed"), "Wr": ("embed", "embed")}
+    return p, s
+
+
+def _layer_init(cfg, rng, dtype):
+    tm_p, tm_s = _tm_init(cfg, L.key_for(rng, "tm"), dtype)
+    cm_p, cm_s = _cm_init(cfg, L.key_for(rng, "cm"), dtype)
+    ln1_p, ln1_s = L.norm_init(cfg, dtype)
+    ln2_p, ln2_s = L.norm_init(cfg, dtype)
+    return ({"tm": tm_p, "cm": cm_p, "ln1": ln1_p, "ln2": ln2_p},
+            {"tm": tm_s, "cm": cm_s, "ln1": ln1_s, "ln2": ln2_s})
+
+
+def init_params(cfg, rng) -> Tuple[Dict, Dict]:
+    dtype = jnp.dtype(cfg.dtype)
+    emb_p, emb_s = L.embed_init(cfg, L.key_for(rng, "embed"), dtype)
+    keys = jax.random.split(L.key_for(rng, "layers"), cfg.n_layers)
+    layers_p = jax.vmap(lambda k: _layer_init(cfg, k, dtype)[0])(keys)
+    _, layer_s = _layer_init(cfg, keys[0], dtype)
+    layers_s = jax.tree.map(lambda ax: ("layers",) + tuple(ax), layer_s,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    fin_p, fin_s = L.norm_init(cfg, dtype)
+    return ({"embed": emb_p, "layers": layers_p, "final_norm": fin_p},
+            {"embed": emb_s, "layers": layers_s, "final_norm": fin_s})
+
+
+def _shift(x, x_prev):
+    """Token shift: [B,S,D] -> previous token's features; x_prev [B,D]."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """WKV-6: r,k,v,w [B,T,H,hd]; state S [B,H,hd_k,hd_v].
+
+    y_t = (S_t + (u*k_t) outer v_t)^T r_t;  S_{t+1} = diag(w_t) S_t + k_t (x) v_t
+    """
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # [B,H,hd]
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), S  # [B,T,H,hd_v], final state
+
+
+def _time_mix(cfg, p, x, x_prev, state):
+    """Returns (out [B,S,D], new_x_prev [B,D], new_state [B,H,hd,hd])."""
+    B, S, D = x.shape
+    h, hd = D // cfg.ssm_head_dim, cfg.ssm_head_dim
+    xs = _shift(x, x_prev)
+
+    def mix(name):
+        mu = p[f"mu_{name}"]
+        return x * mu + xs * (1.0 - mu)
+
+    r = (mix("r") @ p["Wr"]).reshape(B, S, h, hd)
+    k = (mix("k") @ p["Wk"]).reshape(B, S, h, hd)
+    v = (mix("v") @ p["Wv"]).reshape(B, S, h, hd)
+    g = jax.nn.silu(mix("g") @ p["Wg"])
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(x_w)))
+    w_raw = p["w0"] + jnp.tanh(mix("w") @ p["wA"]) @ p["wB"]
+    w = jnp.exp(-jnp.exp(w_raw.astype(F32))).astype(x.dtype)
+    w = w.reshape(B, S, h, hd)
+
+    y, new_state = _wkv_scan(r.astype(F32), k.astype(F32), v.astype(F32),
+                             w.astype(F32), p["u"].astype(F32),
+                             state.astype(F32))
+    y = L.group_norm_heads(y.astype(x.dtype), p["gn_w"], p["gn_b"])
+    y = (y.reshape(B, S, D) * g) @ p["Wo"]
+    return y, x[:, -1], new_state.astype(state.dtype)
+
+
+def _channel_mix(cfg, p, x, x_prev):
+    xs = _shift(x, x_prev)
+    xk = x * p["mu_k"] + xs * (1.0 - p["mu_k"])
+    xr = x * p["mu_r"] + xs * (1.0 - p["mu_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["Wk"]))
+    k = shd(k, "batch", None, "mlp_act")
+    return jax.nn.sigmoid(xr @ p["Wr"]) * (k @ p["Wv"]), x[:, -1]
+
+
+def _block(cfg, lp, x, cache):
+    """cache per layer: {"state" [B,H,hd,hd], "tm_x" [B,D], "cm_x" [B,D]}."""
+    h, hd = cfg.d_model // cfg.ssm_head_dim, cfg.ssm_head_dim
+    B = x.shape[0]
+    if cache is None:
+        cache = {"state": jnp.zeros((B, h, hd, hd), F32),
+                 "tm_x": jnp.zeros((B, cfg.d_model), x.dtype),
+                 "cm_x": jnp.zeros((B, cfg.d_model), x.dtype)}
+    hx = L.apply_norm(cfg, lp["ln1"], x)
+    a, tm_x, state = _time_mix(cfg, lp["tm"], hx, cache["tm_x"], cache["state"])
+    x = x + a
+    hx = L.apply_norm(cfg, lp["ln2"], x)
+    m, cm_x = _channel_mix(cfg, lp["cm"], hx, cache["cm_x"])
+    x = x + m
+    return x, {"state": state, "tm_x": tm_x, "cm_x": cm_x}
+
+
+def _stack(cfg, params, x, cache):
+    has_cache = cache is not None
+
+    def body(carry, xs):
+        lp = xs[0] if has_cache else xs
+        lc = xs[1] if has_cache else None
+        y, nc = _block(cfg, lp, carry, lc)
+        return y, nc
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (params["layers"], cache) if has_cache else params["layers"]
+    x, new_cache = jax.lax.scan(body, x, xs)
+    return x, new_cache
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None) -> Dict:
+    """RWKV cache is O(1) in sequence length — the long_500k enabler."""
+    h, hd = cfg.d_model // cfg.ssm_head_dim, cfg.ssm_head_dim
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return {
+        "state": jnp.zeros((cfg.n_layers, batch, h, hd, hd), F32),
+        "tm_x": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt),
+        "cm_x": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt),
+    }
+
+
+def cache_specs(cfg) -> Dict:
+    return {"state": ("layers", "batch", "heads", None, None),
+            "tm_x": ("layers", "batch", "embed_act"),
+            "cm_x": ("layers", "batch", "embed_act")}
+
+
+def apply_train(cfg, params, batch, *, collect_stats: bool = False):
+    x = L.embed_tokens(params["embed"], batch["tokens"], cfg.d_model)
+    x = shd(x, "batch", "seq_act", "embed_act")
+    x, _ = _stack(cfg, params, x, None)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits_sharded(params["embed"], x)
+    return logits, {"aux_loss": jnp.zeros((), F32), "hdp": None}
+
+
+def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False):
+    x = L.embed_tokens(params["embed"], batch["tokens"], cfg.d_model)
+    x = shd(x, "batch", "seq_act", "embed_act")
+    x, new_cache = _stack(cfg, params, x, cache)
+    x = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    return L.lm_logits_sharded(params["embed"], x), new_cache, None
+
+
+def apply_decode(cfg, params, token, cache, pos, *, collect_stats: bool = False):
+    x = L.embed_tokens(params["embed"], token, cfg.d_model)
+    x, new_cache = _stack(cfg, params, x, cache)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return L.lm_logits(params["embed"], x), new_cache, None
+
+
+def param_count(cfg) -> int:
+    d, f = cfg.d_model, cfg.d_ff
+    tm = 5 * d + 5 * d * d + d + d * LORA_R + LORA_R * d + 3 * d
+    cm = 2 * d + d * f + f * d + d * d
+    per_layer = tm + cm + 4 * d
+    return cfg.n_layers * per_layer + cfg.vocab_size * d * 2 + d

@@ -1,0 +1,269 @@
+"""Zamba2 hybrid: Mamba2 backbone + ONE shared attention block (with
+per-invocation LoRA) applied every `attn_every` layers on
+concat(hidden, original embedding) — the architecture's hallmark weight
+sharing [arXiv:2411.15242].
+
+HDP applies to the shared attention block only; Mamba2 blocks are
+attention-free (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import shard_activation as shd
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models.attention import attn_apply, attn_init
+
+F32 = jnp.float32
+LORA_R = 16
+
+
+def _n_groups(cfg) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def _n_tail(cfg) -> int:
+    return cfg.n_layers % cfg.attn_every
+
+
+def _shared_cfg(cfg):
+    """The shared block runs at width 2*d_model (concat input)."""
+    return cfg.replace(d_model=2 * cfg.d_model, sliding_window=0,
+                       qkv_bias=False, qk_norm=False, n_experts=0)
+
+
+def _shared_init(cfg, rng, dtype) -> Tuple[Dict, Dict]:
+    scfg = _shared_cfg(cfg)
+    attn_p, attn_s = attn_init(scfg, L.key_for(rng, "attn"), dtype)
+    d2, d, f = 2 * cfg.d_model, cfg.d_model, cfg.d_ff
+    g = _n_groups(cfg)
+    h, hd = cfg.n_heads, cfg.hd
+    p = {
+        "attn": attn_p,
+        "ln1": {"w": jnp.ones((d2,), dtype)},
+        "ln2": {"w": jnp.ones((d2,), dtype)},
+        "mlp": {"w_gate": L.dense_init(L.key_for(rng, "mg"), (d2, f), dtype),
+                "w_up": L.dense_init(L.key_for(rng, "mu"), (d2, f), dtype),
+                "w_down": L.dense_init(L.key_for(rng, "md"), (f, d2), dtype)},
+        "proj_out": L.dense_init(L.key_for(rng, "po"), (d2, d), dtype),
+        # per-invocation LoRA deltas on wq/wk/wv (stacked over groups)
+        "lora_A": L.dense_init(L.key_for(rng, "lA"), (g, 3, d2, LORA_R), dtype,
+                               in_axis=2),
+        "lora_B": jnp.zeros((g, 3, LORA_R, h * hd), dtype),
+    }
+    s = {
+        "attn": attn_s,
+        "ln1": {"w": ("embed",)}, "ln2": {"w": ("embed",)},
+        "mlp": {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+                "w_down": ("mlp", "embed")},
+        "proj_out": ("embed", "embed"),
+        "lora_A": ("groups", None, "embed", None),
+        "lora_B": ("groups", None, None, "heads"),
+    }
+    return p, s
+
+
+def init_params(cfg, rng) -> Tuple[Dict, Dict]:
+    dtype = jnp.dtype(cfg.dtype)
+    emb_p, emb_s = L.embed_init(cfg, L.key_for(rng, "embed"), dtype)
+    g, a, t = _n_groups(cfg), cfg.attn_every, _n_tail(cfg)
+
+    def one_mamba(k):
+        mp, _ = mamba2.layer_init(cfg, k, dtype)
+        lnp, _ = L.norm_init(cfg, dtype)
+        return {"m": mp, "ln": lnp}
+
+    _, m_s = mamba2.layer_init(cfg, rng, dtype)
+    _, ln_s = L.norm_init(cfg, dtype)
+    keys = jax.random.split(L.key_for(rng, "mamba"), g * a).reshape(g, a, 2)
+    grouped = jax.vmap(jax.vmap(one_mamba))(keys)
+    grouped_s = jax.tree.map(lambda ax: ("groups", "layers") + tuple(ax),
+                             {"m": m_s, "ln": ln_s},
+                             is_leaf=lambda x: isinstance(x, tuple))
+    params = {"embed": emb_p, "grouped": grouped}
+    specs = {"embed": emb_s, "grouped": grouped_s}
+    if t:
+        tkeys = jax.random.split(L.key_for(rng, "tail"), t)
+        params["tail"] = jax.vmap(one_mamba)(tkeys)
+        specs["tail"] = jax.tree.map(lambda ax: ("layers",) + tuple(ax),
+                                     {"m": m_s, "ln": ln_s},
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    sh_p, sh_s = _shared_init(cfg, L.key_for(rng, "shared"), dtype)
+    fin_p, fin_s = L.norm_init(cfg, dtype)
+    params.update(shared=sh_p, final_norm=fin_p)
+    specs.update(shared=sh_s, final_norm=fin_s)
+    return params, specs
+
+
+def _apply_shared(cfg, p, h, emb0, lora_a, lora_b, *, mode, positions,
+                  cache, collect_stats):
+    """One invocation of the shared block; returns (h', new_cache, stats)."""
+    scfg = _shared_cfg(cfg)
+    x = jnp.concatenate([h, emb0], axis=-1)
+    hln = L.rms_norm(x, p["ln1"]["w"])
+    # LoRA-specialized qkv for this invocation
+    H, hd = cfg.n_heads, cfg.hd
+    d2 = 2 * cfg.d_model
+    attn_p = dict(p["attn"])
+    for i, w in enumerate(("wq", "wk", "wv")):
+        delta = (lora_a[i] @ lora_b[i]).reshape(d2, *attn_p[w].shape[1:])
+        attn_p[w] = attn_p[w] + delta
+    a, new_cache, stats = attn_apply(scfg, attn_p, hln, mode=mode,
+                                     positions=positions, cache=cache,
+                                     collect_stats=collect_stats)
+    x = x + a
+    hln = L.rms_norm(x, p["ln2"]["w"])
+    m = jax.nn.silu(hln @ p["mlp"]["w_gate"]) * (hln @ p["mlp"]["w_up"])
+    x = x + m @ p["mlp"]["w_down"]
+    return h + x @ p["proj_out"], new_cache, stats
+
+
+def _run(cfg, params, tokens_or_x, *, mode, positions, cache, collect_stats):
+    if tokens_or_x.ndim == 2:
+        x = L.embed_tokens(params["embed"], tokens_or_x, cfg.d_model)
+    else:
+        x = tokens_or_x
+    x = shd(x, "batch", "seq_act", "embed_act")
+    emb0 = x
+    g = _n_groups(cfg)
+    has_cache = cache is not None
+
+    def mamba_stack(x, mp, mcache):
+        def body(carry, xs):
+            lp = xs[0] if has_cache else xs
+            lc = xs[1] if has_cache else None
+            hln = L.apply_norm(cfg, lp["ln"], carry)
+            y, nc = mamba2.layer_apply(cfg, lp["m"], hln, lc)
+            return carry + y, nc
+        body = jax.checkpoint(body) if cfg.remat else body
+        xs = (mp, mcache) if has_cache else mp
+        return jax.lax.scan(body, x, xs)
+
+    xs = {"mp": params["grouped"], "lora_a": params["shared"]["lora_A"],
+          "lora_b": params["shared"]["lora_B"]}
+
+    if not has_cache:
+        def group_body(carry, xs_g):
+            x, _ = carry
+            x, _mc = mamba_stack(x, xs_g["mp"], None)
+            x, _ac, stats = _apply_shared(cfg, params["shared"], x, emb0,
+                                          xs_g["lora_a"], xs_g["lora_b"],
+                                          mode=mode, positions=positions,
+                                          cache=None,
+                                          collect_stats=collect_stats)
+            return (x, 0), stats
+
+        # remat the whole group too: without it the backward saves every
+        # group-iteration intermediate as a [n_groups, ...] stack
+        # (attention slabs, f32 mamba projections) — 20+ GB at 4k train
+        gbody = jax.checkpoint(group_body) if cfg.remat else group_body
+        (x, _), stats = jax.lax.scan(gbody, (x, 0), xs)
+        new_cache = None
+    else:
+        # inference: caches ride the carry with per-group in-place
+        # updates (stacked scan ys = a second full KV-cache allocation)
+        def group_body(carry, xs_g):
+            x, cache_all, gi = carry
+            take = lambda c: jax.lax.dynamic_index_in_dim(  # noqa: E731
+                c, gi, 0, keepdims=False)
+            put = lambda c, n: jax.lax.dynamic_update_index_in_dim(  # noqa: E731,E501
+                c, n.astype(c.dtype), gi, 0)
+            x, new_mc = mamba_stack(x, xs_g["mp"],
+                                    jax.tree.map(take, cache_all["mamba"]))
+            x, new_ac, stats = _apply_shared(
+                cfg, params["shared"], x, emb0, xs_g["lora_a"],
+                xs_g["lora_b"], mode=mode, positions=positions,
+                cache=jax.tree.map(take, cache_all["attn"]),
+                collect_stats=collect_stats)
+            cache_all = {
+                "mamba": jax.tree.map(put, cache_all["mamba"], new_mc),
+                "attn": jax.tree.map(put, cache_all["attn"], new_ac),
+            }
+            return (x, cache_all, gi + 1), stats
+
+        (x, new_cache, _), stats = jax.lax.scan(
+            group_body,
+            (x, {"mamba": cache["mamba"], "attn": cache["attn"]},
+             jnp.asarray(0, jnp.int32)),
+            xs)
+
+    if _n_tail(cfg):
+        tc = cache["tail"] if has_cache else None
+        x, new_tc = mamba_stack(x, params["tail"], tc)
+        if has_cache:
+            new_cache["tail"] = new_tc
+    return x, new_cache, stats
+
+
+def apply_train(cfg, params, batch, *, collect_stats: bool = False):
+    x, _, stats = _run(cfg, params, batch["tokens"], mode="train",
+                       positions=jnp.arange(batch["tokens"].shape[1]),
+                       cache=None, collect_stats=collect_stats)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits_sharded(params["embed"], x)
+    return logits, {"aux_loss": jnp.zeros((), F32), "hdp": stats}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None) -> Dict:
+    g, a, t = _n_groups(cfg), cfg.attn_every, _n_tail(cfg)
+    dt = jnp.dtype(dtype or cfg.dtype)
+    one_m = mamba2.init_cache(cfg, batch, dtype)
+    cache = {
+        "mamba": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (g, a) + x.shape), one_m),
+        "attn": {
+            "k": jnp.zeros((g, batch, max_len, cfg.n_kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((g, batch, max_len, cfg.n_kv_heads, cfg.hd), dt),
+        },
+    }
+    if t:
+        cache["tail"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (t,) + x.shape), one_m)
+    return cache
+
+
+def cache_specs(cfg) -> Dict:
+    mspec = jax.tree.map(lambda ax: ("groups", "layers") + tuple(ax),
+                         mamba2.cache_specs(),
+                         is_leaf=lambda x: isinstance(x, tuple))
+    out = {"mamba": mspec,
+           "attn": {"k": ("groups", "batch", "kv_seq", "kv_heads", "head_dim"),
+                    "v": ("groups", "batch", "kv_seq", "kv_heads", "head_dim")}}
+    if _n_tail(cfg):
+        out["tail"] = jax.tree.map(lambda ax: ("layers",) + tuple(ax),
+                                   mamba2.cache_specs(),
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return out
+
+
+def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False):
+    tokens = batch["tokens"]
+    x, new_cache, stats = _run(cfg, params, tokens, mode="prefill",
+                               positions=jnp.arange(tokens.shape[1]),
+                               cache=cache, collect_stats=collect_stats)
+    x = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    return L.lm_logits_sharded(params["embed"], x), new_cache, stats
+
+
+def apply_decode(cfg, params, token, cache, pos, *, collect_stats: bool = False):
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    x, new_cache, stats = _run(cfg, params, token, mode="decode",
+                               positions=positions, cache=cache,
+                               collect_stats=collect_stats)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return L.lm_logits(params["embed"], x), new_cache, stats
+
+
+def param_count(cfg) -> int:
+    d, d2, f = cfg.d_model, 2 * cfg.d_model, cfg.d_ff
+    h, hd = cfg.n_heads, cfg.hd
+    g = _n_groups(cfg)
+    mamba = cfg.n_layers * (mamba2.param_count(cfg) + d)
+    shared = (d2 * h * hd + 2 * d2 * cfg.n_kv_heads * hd + h * hd * d2
+              + 2 * d2 + 3 * d2 * f // 1 + d2 * d
+              + g * 3 * (d2 * LORA_R + LORA_R * h * hd))
+    return mamba + shared + cfg.vocab_size * d * 2 + d

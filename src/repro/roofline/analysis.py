@@ -1,0 +1,111 @@
+"""Three-term roofline from compiled dry-run artifacts.
+
+  compute_t    = HLO_FLOPs(per-device program) / peak_FLOP/s
+  memory_t     = HLO bytes accessed            / HBM bandwidth
+  collective_t = collective operand bytes      / ICI link bandwidth
+
+FLOPs / bytes / collective bytes come from :mod:`repro.roofline.hlo_cost`,
+a **while-aware** HLO cost model: ``compiled.cost_analysis()`` counts scan
+bodies once (undercounting layer-scanned + grad-accumulated programs by
+~``n_layers * num_microbatches``), so it is kept only as a cross-check
+field (``xla_flops``).  Collective bytes are parsed from the compiled HLO
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-
+permute operand shapes, trip-multiplied) since XLA does not report them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.roofline import hlo_cost
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (conservative single-link)
+HBM_BYTES = 16 * 2 ** 30     # 16 GiB HBM2 capacity (binary, per spec);
+#                              runtime reserve is ~100s of MB — cells within
+#                              ~0.5 GB of the edge are flagged in
+#                              EXPERIMENTS.md §Dry-run.
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, int]
+    compute_t: float
+    memory_t: float
+    collective_t: float
+    bottleneck: str
+    peak_memory_bytes: Optional[float] = None
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None
+    xla_flops: Optional[float] = None       # cost_analysis() cross-check
+    top_flops: Optional[List] = None        # [(label, flops)] attribution
+    top_bytes: Optional[List] = None
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, *, model_flops_per_device: Optional[float] = None,
+            keep_top: int = 8) -> Roofline:
+    """model_flops_per_device: 6*N*D token-based FLOPs (global / n_devices)."""
+    cost = hlo_cost.module_cost(compiled.as_text())
+    flops, byts, cbytes = cost.flops, cost.bytes, cost.coll_bytes
+
+    xla = None
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        xla = float(ca.get("flops", 0.0))
+    except Exception:
+        pass
+
+    ct = flops / PEAK_FLOPS
+    mt = byts / HBM_BW
+    lt = cbytes / ICI_BW
+    bottleneck = max((("compute", ct), ("memory", mt), ("collective", lt)),
+                     key=lambda kv: kv[1])[0]
+
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes
+                     + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    except Exception:
+        pass
+
+    ratio = (model_flops_per_device / flops
+             if model_flops_per_device and flops else None)
+    top = hlo_cost.top_contributors(cost, keep_top)
+    return Roofline(flops, byts, cbytes,
+                    {k: int(v) for k, v in cost.coll_by_kind.items()},
+                    ct, mt, lt, bottleneck, peak,
+                    model_flops_per_device, ratio, xla,
+                    top["flops"], top["bytes"])
+
+
+def model_flops(cfg, shape, n_devices: int) -> float:
+    """6*N_active*D per step (train: 3x for fwd+bwd is folded into the 6;
+    inference: 2*N*D per token + 2*attention read of the KV cache)."""
+    from repro.models import registry
+    n_active = registry.param_count(cfg, active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices
+
+
+# kept for backward compatibility with earlier tests/benchmarks
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    cost = hlo_cost.module_cost(hlo_text)
+    return {k: int(v) for k, v in cost.coll_by_kind.items()}

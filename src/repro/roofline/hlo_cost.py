@@ -1,0 +1,503 @@
+"""While-aware HLO cost model (flops / bytes / collective bytes).
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, regardless
+of trip count — for scan-over-layers + grad-accumulation programs that
+underestimates flops by ~``n_layers * num_microbatches``.  This module
+re-derives the three roofline inputs directly from ``compiled.as_text()``:
+
+* every computation is parsed into instructions (name, shape, op,
+  operands, attrs);
+* ``while`` ops multiply their body+condition cost by the trip count
+  (``backend_config known_trip_count``, else the ``compare(iv, const)``
+  constant in the condition computation);
+* ``fusion``/``call`` recurse into the called computation for flops,
+  while bytes for a fusion are its operands + outputs (internals stay in
+  registers) with dynamic-slice / dynamic-update-slice special-cased to
+  the *slice* volume — a scanned layer then reads each layer's weights
+  once per iteration, which is the physically-correct HBM traffic;
+* collectives are summed by kind (operand bytes, trip-aware) — the
+  ``collective_t`` roofline numerator.
+
+The parser is validated in tests against ``cost_analysis()`` of the same
+program compiled with the scan fully unrolled (tests/test_roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "token": 0,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_ELEMENTWISE_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "negate", "abs", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "compare", "select", "and", "or", "xor", "not",
+    "shift-left", "shift-right-arithmetic", "shift-right-logical",
+    "clamp", "remainder", "atan2", "is-finite",
+}
+# transcendentals: count 1 flop/elem too (matches HloCostAnalysis default)
+_ELEMENTWISE_1FLOP |= {"exponential", "exponential-minus-one", "log",
+                       "log-plus-one", "tanh", "rsqrt", "sqrt", "cbrt",
+                       "power", "logistic", "sine", "cosine", "tan",
+                       "erf", "real", "imag"}
+
+_ZERO_BYTE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "add-dependency", "opt-barrier", "partition-id",
+    "replica-id", "custom-call",  # custom-call handled separately
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+
+# --------------------------------------------------------------- parsing
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    attrs: str
+    args_raw: str = ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr]
+    order: List[str]
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-$]+)\s*\(.*\)\s*->.*\{\s*$")
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z]*\d*\w*?)\[([\d,]*)\]")
+
+
+def _find_call_close(s: str, open_idx: int) -> int:
+    depth = 0
+    for i in range(open_idx, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(s) - 1
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    line = line.strip()
+    if line.startswith("ROOT "):
+        line = line[5:]
+    if not line.startswith("%"):
+        return None
+    eq = line.find(" = ")
+    if eq < 0:
+        return None
+    name = line[1:eq].strip()
+    rest = line[eq + 3:]
+    # type is either a (tuple ...) or a single token
+    if rest.startswith("("):
+        close = _find_call_close(rest, 0)
+        type_str = rest[: close + 1]
+        rest = rest[close + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        type_str = rest[:sp]
+        rest = rest[sp + 1:]
+    m = re.match(r"([\w\-$]+)\(", rest)
+    if not m:
+        return None
+    op = m.group(1)
+    close = _find_call_close(rest, m.end() - 1)
+    arg_str = rest[m.end(): close]
+    attrs = rest[close + 1:]
+    operands = re.findall(r"%([\w.\-$]+)", arg_str)
+    return Instr(name, type_str, op, operands, attrs, arg_str)
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], str]:
+    """-> ({name: Computation}, entry_name)."""
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and ("->" in line):
+                cur = Computation(m.group(1), {}, [])
+                if line.startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if line == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            cur.instrs[ins.name] = ins
+            cur.order.append(ins.name)
+    if entry is None:  # fall back: last computation
+        entry = next(reversed(comps)) if comps else ""
+    return comps, entry
+
+
+# ----------------------------------------------------------- shape helpers
+def type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        b = _DTYPE_BYTES.get(m.group(1))
+        if b is None:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def type_elems(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _operand_type(comp: Computation, operand: str) -> str:
+    ins = comp.instrs.get(operand)
+    return ins.type_str if ins is not None else ""
+
+
+# ------------------------------------------------------------- cost model
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # attribution: {label: flops} / {label: bytes} for the breakdowns
+    flops_by_label: Dict[str, float] = dataclasses.field(default_factory=dict)
+    bytes_by_label: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_by_label: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+        for k, v in other.flops_by_label.items():
+            self.flops_by_label[k] = self.flops_by_label.get(k, 0.0) + v * mult
+        for k, v in other.bytes_by_label.items():
+            self.bytes_by_label[k] = self.bytes_by_label.get(k, 0.0) + v * mult
+        for k, v in other.coll_by_label.items():
+            self.coll_by_label[k] = self.coll_by_label.get(k, 0.0) + v * mult
+
+
+_TRIP_RE = re.compile(r'known_trip_count\\?":?\s*\{\\?"?n\\?"?\s*:\s*\\?"?(\d+)')
+
+
+def _trip_count(ins: Instr, comps: Dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(ins.attrs)
+    if m:
+        return int(m.group(1))
+    # fall back: largest integer constant in the condition computation
+    # (the loop bound of the `compare(iv, const)`)
+    mc = re.search(r"condition=%?([\w.\-$]+)", ins.attrs)
+    if mc and mc.group(1) in comps:
+        cond = comps[mc.group(1)]
+        consts = []
+        for i in cond.instrs.values():
+            if i.op == "constant":
+                mm = re.fullmatch(r"-?\d+", i.args_raw.strip())
+                if mm:
+                    consts.append(int(mm.group(0)))
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _called(ins: Instr, key: str = "calls") -> List[str]:
+    m = re.search(key + r"=%?([\w.\-$]+)", ins.attrs)
+    if m:
+        return [m.group(1)]
+    m = re.search(key + r"=\{([^}]*)\}", ins.attrs)
+    if m:
+        return re.findall(r"%?([\w.\-$]+)", m.group(1))
+    return []
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out = _dims(ins.type_str)
+    lhs_t = _operand_type(comp, ins.operands[0]) if ins.operands else ""
+    lhs = _dims(lhs_t)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    contract = 1
+    if m and lhs:
+        for d in m.group(1).split(","):
+            if d:
+                contract *= lhs[int(d)]
+    return 2.0 * math.prod(out) * contract if out else 0.0
+
+
+def _conv_flops(comp: Computation, ins: Instr) -> float:
+    # approximation: 2 * out_elems * prod(kernel spatial) * in_feat/groups
+    out = math.prod(_dims(ins.type_str)) if _dims(ins.type_str) else 0
+    rhs_t = _operand_type(comp, ins.operands[1]) if len(ins.operands) > 1 else ""
+    rhs = _dims(rhs_t)
+    groups = 1
+    m = re.search(r"feature_group_count=(\d+)", ins.attrs)
+    if m:
+        groups = int(m.group(1))
+    k = math.prod(rhs) / max(groups, 1) if rhs else 1
+    return 2.0 * out * k / max(rhs[-1] if rhs else 1, 1)
+
+
+def _label(ins: Instr) -> str:
+    m = re.search(r'op_name="([^"]*)"', ins.attrs)
+    if not m:
+        return ins.op
+    # strip jit wrapper + indices for stable grouping
+    name = m.group(1)
+    name = re.sub(r"\[[^\]]*\]", "", name)
+    parts = [p for p in name.split("/") if p and not p.startswith("jit(")]
+    return "/".join(parts[-3:]) if parts else ins.op
+
+
+_PASSTHROUGH = {"bitcast", "copy", "reshape", "transpose",
+                "convert", "get-tuple-element"}
+
+
+def _resolve_param(callee: Computation, name: Optional[str]) -> Optional[str]:
+    """Follow no-op chains (bitcast/reshape/...) back to a parameter."""
+    seen = 0
+    while name is not None and seen < 16:
+        ins = callee.instrs.get(name)
+        if ins is None:
+            return None
+        if ins.op == "parameter":
+            return name
+        if ins.op in _PASSTHROUGH and ins.operands:
+            name, seen = ins.operands[0], seen + 1
+            continue
+        return None
+    return None
+
+
+def _slice_bytes(callee: Computation) -> Optional[Dict[str, float]]:
+    """Per-parameter byte override for fusions containing (dynamic-)slice:
+    a slice reads only the slice volume of its big operand (a scanned
+    layer reads one layer's weights per iteration, not the whole stack)."""
+    overrides: Dict[str, float] = {}
+    for ins in callee.instrs.values():
+        if ins.op in ("dynamic-slice", "slice", "gather"):
+            src = _resolve_param(callee, ins.operands[0] if ins.operands
+                                 else None)
+            if src is not None:
+                b = float(type_bytes(ins.type_str))
+                overrides[src] = overrides.get(src, 0.0) + b
+        if ins.op == "dynamic-update-slice" and len(ins.operands) >= 2:
+            upd_t = _operand_type(callee, ins.operands[1])
+            if not upd_t:  # update defined through a chain: use its def
+                upd_t = ins.type_str
+            ub = float(type_bytes(upd_t))
+            src = _resolve_param(callee, ins.operands[0])
+            if src is not None:
+                overrides[src] = overrides.get(src, 0.0) + ub
+            overrides["__output__"] = ub
+    return overrides or None
+
+
+class HloCost:
+    """Trip-count-aware cost walker over a parsed HLO module."""
+
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_module(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    # ---- per-computation ----
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            self._memo[name] = total
+            return total
+        self._memo[name] = total  # guard (recursion)
+        for iname in comp.order:
+            total.add(self.instr_cost(comp, comp.instrs[iname]))
+        return total
+
+    def _fusion_cost(self, comp: Computation, ins: Instr) -> Cost:
+        c = Cost()
+        callees = _called(ins)
+        # flops: walk fused computation (internals execute)
+        inner = Cost()
+        overrides = None
+        for cal in callees:
+            inner.add(self._flops_only(cal))
+            ov = _slice_bytes(self.comps[cal]) if cal in self.comps else None
+            if ov:
+                overrides = ov
+        c.flops += inner.flops
+        # bytes: fusion operands + output, slice-aware
+        callee = self.comps.get(callees[0]) if callees else None
+        b = 0.0
+        for pos, opd in enumerate(ins.operands):
+            t = _operand_type(comp, opd)
+            ob = float(type_bytes(t))
+            if overrides and callee is not None:
+                # match positional parameter name "param_<pos>*"
+                for pname, bb in overrides.items():
+                    if pname.startswith("param_") and \
+                            re.match(rf"param_{pos}(\.|$)", pname):
+                        ob = bb
+                        break
+            b += ob
+        out_b = float(type_bytes(ins.type_str))
+        if overrides and "__output__" in overrides:
+            out_b = overrides["__output__"]
+        c.bytes += b + out_b
+        lbl = _label(ins)
+        c.flops_by_label[lbl] = c.flops
+        c.bytes_by_label[lbl] = c.bytes
+        return c
+
+    def _flops_only(self, name: str) -> Cost:
+        comp = self.comps.get(name)
+        c = Cost()
+        if comp is None:
+            return c
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            if ins.op == "dot":
+                c.flops += _dot_flops(comp, ins)
+            elif ins.op == "convolution":
+                c.flops += _conv_flops(comp, ins)
+            elif ins.op in _ELEMENTWISE_1FLOP:
+                c.flops += type_elems(ins.type_str)
+            elif ins.op in ("reduce", "reduce-window"):
+                c.flops += type_elems(_operand_type(comp, ins.operands[0])) \
+                    if ins.operands else 0
+            elif ins.op == "fusion" or ins.op == "call":
+                for cal in _called(ins):
+                    c.add(self._flops_only(cal))
+        return c
+
+    # ---- per-instruction ----
+    def instr_cost(self, comp: Computation, ins: Instr) -> Cost:
+        op = ins.op
+        c = Cost()
+        if op.endswith("-done") or op == "copy-done":
+            return c
+        base = op[:-6] if op.endswith("-start") else op
+
+        if base in _COLLECTIVES:
+            ob = sum(float(type_bytes(_operand_type(comp, o)))
+                     for o in ins.operands)
+            # fall back to output size when operands unresolvable
+            if ob == 0.0:
+                ob = float(type_bytes(ins.type_str))
+            c.coll_bytes += ob
+            c.coll_by_kind[base] = c.coll_by_kind.get(base, 0.0) + ob
+            c.bytes += ob + float(type_bytes(ins.type_str))
+            lbl = _label(ins)
+            c.bytes_by_label[lbl] = c.bytes
+            c.coll_by_label[f"{base}:{lbl}"] = ob
+            return c
+
+        if op == "while":
+            body = _called(ins, "body")
+            cond = _called(ins, "condition")
+            trip = _trip_count(ins, self.comps)
+            inner = Cost()
+            for b in body:
+                inner.add(self.comp_cost(b))
+            for cd in cond:
+                inner.add(self.comp_cost(cd))
+            c.add(inner, mult=float(trip))
+            return c
+
+        if op == "conditional":
+            branches = _called(ins, "branch_computations") or \
+                _called(ins, "true_computation") + _called(ins, "false_computation")
+            costs = [self.comp_cost(b) for b in branches if b in self.comps]
+            if costs:  # max over branches (one executes)
+                c.add(max(costs, key=lambda x: x.flops + x.bytes))
+            return c
+
+        if op == "fusion":
+            return self._fusion_cost(comp, ins)
+        if op == "call":
+            for cal in _called(ins, "to_apply") or _called(ins):
+                c.add(self.comp_cost(cal))
+            return c
+
+        lbl = _label(ins)
+        if op == "dot":
+            c.flops += _dot_flops(comp, ins)
+            c.flops_by_label[lbl] = c.flops
+        elif op == "convolution":
+            c.flops += _conv_flops(comp, ins)
+            c.flops_by_label[lbl] = c.flops
+        elif op in _ELEMENTWISE_1FLOP:
+            c.flops += type_elems(ins.type_str)
+        elif op in ("reduce", "reduce-window"):
+            c.flops += (type_elems(_operand_type(comp, ins.operands[0]))
+                        if ins.operands else 0)
+
+        if op in _ZERO_BYTE_OPS:
+            if op == "custom-call":
+                c.bytes += float(type_bytes(ins.type_str))
+            return c
+        if op in ("dynamic-slice", "slice", "gather"):
+            c.bytes += 2.0 * float(type_bytes(ins.type_str))
+        elif op == "dynamic-update-slice":
+            upd = (float(type_bytes(_operand_type(comp, ins.operands[1])))
+                   if len(ins.operands) > 1 else 0.0)
+            c.bytes += 2.0 * upd
+        else:
+            c.bytes += float(type_bytes(ins.type_str)) + sum(
+                float(type_bytes(_operand_type(comp, o)))
+                for o in ins.operands)
+        c.bytes_by_label[lbl] = c.bytes_by_label.get(lbl, 0.0) + c.bytes
+        return c
+
+    # ---- public ----
+    def total(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+
+def module_cost(hlo_text: str) -> Cost:
+    return HloCost(hlo_text).total()
+
+
+def top_contributors(cost: Cost, n: int = 12) -> Dict[str, List]:
+    fl = sorted(cost.flops_by_label.items(), key=lambda kv: -kv[1])[:n]
+    by = sorted(cost.bytes_by_label.items(), key=lambda kv: -kv[1])[:n]
+    return {"flops": fl, "bytes": by}

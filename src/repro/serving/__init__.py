@@ -1,0 +1,2 @@
+from repro.serving.engine import Engine, Request, Result  # noqa: F401
+from repro.serving.kv_cache import SlotCache  # noqa: F401

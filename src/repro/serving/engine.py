@@ -1,0 +1,232 @@
+"""Batched serving engine with HDP: prefill/decode, continuous batching.
+
+The engine keeps a fixed pool of ``max_batch`` decode slots. New requests
+are prefilled one at a time (prompt padded up to the nearest *bucket* so
+the prefill jit-cache stays small), their KV/state cache inserted into a
+free slot, and the batched decode step advances every active slot with
+its own position (per-slot positions thread through
+``attention.attn_apply``). Finished slots (EOS or per-request token
+budget) are freed and immediately refillable — continuous batching.
+
+HDP is active inside both prefill and decode attention when
+``cfg.hdp.enabled`` — stats (block/head sparsity per layer) are
+aggregated into engine metrics so serving examples/benchmarks can report
+the achieved sparsity next to throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.serving import kv_cache
+
+I32 = jnp.int32
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    prompt_len: int
+    tokens: List[int]
+    prefill_s: float = 0.0
+    decode_steps: int = 0
+
+
+def _buckets(lens: Sequence[int]) -> Sequence[int]:
+    out = sorted(set(lens))
+    return out
+
+
+class Engine:
+    """Single-host serving engine (mesh-aware variants run via launch/serve).
+
+    Parameters
+    ----------
+    cfg: ModelConfig (reduced configs run on CPU).
+    params: model params; freshly initialized when None.
+    max_batch: decode slot count.
+    max_len: serving cache length (prompt + generation must fit).
+    prefill_buckets: pad-to lengths for the prefill jit cache.
+    collect_stats: aggregate HDP sparsity stats (small overhead).
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, *, rng=None,
+                 max_batch: int = 4, max_len: int = 128,
+                 prefill_buckets: Sequence[int] = (32, 64, 128),
+                 collect_stats: bool = False):
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "enc-dec serving uses launch/serve.py --arch whisper path")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.buckets = sorted(b for b in prefill_buckets if b <= max_len) \
+            or [max_len]
+        self.collect_stats = collect_stats
+
+        if params is None:
+            rng = rng if rng is not None else jax.random.PRNGKey(0)
+            params, _ = registry.init_params(cfg, rng)
+        self.params = params
+
+        self.slots = kv_cache.SlotCache(cfg, max_batch, max_len)
+        self._free = list(range(max_batch))
+        self._active: Dict[int, Dict[str, Any]] = {}  # slot -> request state
+        self._results: Dict[int, Result] = {}
+        self._queue: List[Request] = []
+        self._last_tok = jnp.zeros((max_batch, 1), I32)
+        self._pos = jnp.zeros((max_batch,), I32)
+        self.metrics: Dict[str, float] = {
+            "prefill_s": 0.0, "decode_s": 0.0, "decode_steps": 0,
+            "tokens_out": 0, "block_sparsity": 0.0, "head_sparsity": 0.0,
+            "stat_samples": 0}
+
+        self._prefill_jit = jax.jit(self._prefill_fn, static_argnums=(2,))
+        self._decode_jit = jax.jit(self._decode_fn)
+
+    # ------------------------------------------------------------ jitted fns
+    def _prefill_fn(self, params, tokens, bucket_len):
+        cache = registry.init_cache(self.cfg, 1, max_len=self.max_len)
+        batch = {"tokens": tokens}
+        logits, new_cache, stats = registry.apply_prefill(
+            self.cfg, params, batch, cache,
+            collect_stats=self.collect_stats)
+        return logits, new_cache, stats
+
+    def _decode_fn(self, params, token, cache, pos):
+        logits, new_cache, stats = registry.apply_decode(
+            self.cfg, params, token, cache, pos[:, None],
+            collect_stats=self.collect_stats)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(I32)[:, None]
+        return nxt, new_cache, stats
+
+    # --------------------------------------------------------------- public
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt+generation exceeds max_len")
+        self._queue.append(req)
+
+    def _bucket_for(self, n: int) -> int:
+        if self.cfg.family in ("rwkv6", "zamba2"):
+            # recurrent state: prefilling pad tokens would corrupt the
+            # SSM state, so these families prefill at exact length
+            return n
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.max_len
+
+    def _admit(self) -> None:
+        while self._queue and self._free:
+            req = self._queue.pop(0)
+            slot = self._free.pop(0)
+            t0 = time.perf_counter()
+            plen = len(req.prompt)
+            bucket = self._bucket_for(plen)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :plen] = np.asarray(req.prompt, np.int32)
+            # right-pad with the last token (positions beyond plen are
+            # overwritten during decode before they are ever attended)
+            toks[0, plen:] = toks[0, plen - 1]
+            _, one_cache, stats = self._prefill_jit(
+                self.params, jnp.asarray(toks), bucket)
+            self.slots.insert(one_cache, slot)
+            self._record_stats(stats)
+            dt = time.perf_counter() - t0
+            self.metrics["prefill_s"] += dt
+            # uniform resume: the first decode step replays the last prompt
+            # token at its own position (its K/V rewrite is idempotent) and
+            # yields the first generated token — identical for aligned and
+            # bucket-padded prompts.
+            self._active[slot] = {"req": req, "generated": []}
+            self._results[req.uid] = Result(req.uid, plen, [], prefill_s=dt)
+            self._last_tok = self._last_tok.at[slot, 0].set(
+                int(req.prompt[-1]))
+            self._pos = self._pos.at[slot].set(plen - 1)
+
+    def _record_stats(self, stats) -> None:
+        if not self.collect_stats or stats is None:
+            return
+        try:
+            bs = float(jnp.mean(stats["block_sparsity"]))
+            hs = float(jnp.mean(stats["head_sparsity"]))
+        except (KeyError, TypeError):
+            return
+        m = self.metrics
+        m["block_sparsity"] += bs
+        m["head_sparsity"] += hs
+        m["stat_samples"] += 1
+
+    def _finish(self, slot: int) -> None:
+        st = self._active.pop(slot)
+        req = st["req"]
+        res = self._results[req.uid]
+        res.tokens = st["generated"]
+        res.decode_steps = len(st["generated"])
+        self.slots.clear(slot)
+        self._free.append(slot)
+
+    def step(self) -> int:
+        """One engine iteration: admit + one batched decode step.
+
+        Returns the number of active slots stepped."""
+        self._admit()
+        if not self._active:
+            return 0
+        t0 = time.perf_counter()
+        nxt, new_cache, stats = self._decode_jit(
+            self.params, self._last_tok, self.slots.cache, self._pos)
+        self.slots.cache = new_cache
+        self._record_stats(stats)
+        nxt_np = np.asarray(nxt)
+        self.metrics["decode_s"] += time.perf_counter() - t0
+        self.metrics["decode_steps"] += 1
+
+        self._pos = self._pos + 1
+        self._last_tok = nxt
+        for slot in list(self._active):
+            st = self._active[slot]
+            req: Request = st["req"]
+            tok = int(nxt_np[slot, 0])
+            st["generated"].append(tok)
+            self.metrics["tokens_out"] += 1
+            done = (len(st["generated"]) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id))
+            if done:
+                self._finish(slot)
+        return len(nxt_np)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Result]:
+        """Drive until every submitted request completes."""
+        steps = 0
+        while (self._queue or self._active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return dict(self._results)
+
+    # ------------------------------------------------------------- reporting
+    def summary(self) -> Dict[str, float]:
+        m = dict(self.metrics)
+        if m["decode_s"] > 0:
+            m["decode_tok_s"] = m["tokens_out"] / m["decode_s"]
+        if m["stat_samples"]:
+            m["block_sparsity"] /= m["stat_samples"]
+            m["head_sparsity"] /= m["stat_samples"]
+        m["cache_bytes"] = kv_cache.cache_bytes(self.slots.cache)
+        return m

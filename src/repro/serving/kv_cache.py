@@ -1,0 +1,122 @@
+"""KV-cache slot management for batched serving.
+
+The decode cache for every family is a pytree whose leaves carry a
+``batch`` axis (its index per leaf comes from ``registry.cache_specs``).
+`SlotCache` provides:
+
+* ``insert(batch_cache, one_cache, slot)`` — copy a freshly-prefilled
+  single-request cache (batch=1, possibly shorter ``max_len``) into slot
+  ``slot`` of the serving batch cache (jit-compatible: slot is traced);
+* ``clear(batch_cache, slot)`` — zero a slot on request completion;
+* ``lengths`` bookkeeping lives in the engine (host side).
+
+HDP interaction: the decode path prunes KV *blocks* per query on the fly
+(`hdp_decode_attention`); the cache layout is unchanged — pruning decides
+which pages are *read*, which is the FUM memory-traffic win, not which
+are stored.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+
+
+def _batch_axes(cfg) -> Any:
+    """Cache-structured tree of the batch-axis index per leaf."""
+    specs = registry.cache_specs(cfg)
+
+    def one(ax):
+        ax = tuple(ax)
+        return ax.index("batch") if "batch" in ax else None
+
+    return jax.tree.map(one, specs,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+class SlotCache:
+    """Slot arithmetic over a family-agnostic cache pytree."""
+
+    def __init__(self, cfg, batch: int, max_len: int, **cache_kw):
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.cache = registry.init_cache(cfg, batch, max_len=max_len,
+                                         **cache_kw)
+        self.axes = _batch_axes(cfg)
+
+    # ------------------------------------------------------------- insert
+    def insert(self, one_cache, slot) -> None:
+        """Copy a batch=1 request cache into `slot` (in place on host)."""
+        self.cache = insert_slot(self.cache, one_cache, slot, self.axes)
+
+    def clear(self, slot) -> None:
+        self.cache = clear_slot(self.cache, slot, self.axes)
+
+
+def _dus_axis(big, small, slot, axis: int):
+    """dynamic_update_slice of `small` into `big` at index `slot` of `axis`,
+    zero-padding the sequence dims when the prefill cache is shorter."""
+    if small.shape[axis] != 1:
+        small = jnp.take(small, jnp.arange(1), axis=axis)  # defensive
+    # pad every non-batch dim that is shorter (bucketed prefill caches)
+    pads = []
+    for d, (bs, ss) in enumerate(zip(big.shape, small.shape)):
+        if d == axis:
+            pads.append((0, 0))
+        else:
+            if ss > bs:
+                raise ValueError(
+                    f"request cache dim {d} ({ss}) exceeds serving cache "
+                    f"({bs})")
+            pads.append((0, bs - ss))
+    small = jnp.pad(small, pads)
+    start = [jnp.asarray(0, jnp.int32)] * big.ndim
+    start[axis] = jnp.asarray(slot, jnp.int32)
+    return jax.lax.dynamic_update_slice(big, small.astype(big.dtype), start)
+
+
+def insert_slot(batch_cache, one_cache, slot, axes) -> Any:
+    def one(big, small, ax):
+        if ax is None:  # no batch axis (shared leaf) — keep serving copy
+            return big
+        return _dus_axis(big, small, slot, ax)
+
+    return jax.tree.map(one, batch_cache, one_cache, axes)
+
+
+def clear_slot(batch_cache, slot, axes) -> Any:
+    def one(big, ax):
+        if ax is None:
+            return big
+        shape = list(big.shape)
+        shape[ax] = 1
+        return _dus_axis(big, jnp.zeros(shape, big.dtype), slot, ax)
+
+    return jax.tree.map(one, batch_cache, axes)
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def kv_read_bytes_per_step(cfg, seq_len: int, batch: int,
+                           hdp_block_sparsity: float = 0.0) -> Tuple[int, int]:
+    """(dense, hdp) HBM bytes read from the KV cache per decode step.
+
+    The FUM accounting: pruned KV blocks are never fetched, so HDP decode
+    reads ``(1 - sparsity)`` of K/V (the int8 scout copy of K always
+    streams). Used by the roofline benchmarks.
+    """
+    if not hasattr(cfg, "n_kv_heads") or cfg.n_kv_heads == 0:
+        return 0, 0
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    layers = cfg.n_layers
+    kv = 2 * layers * batch * seq_len * cfg.n_kv_heads * cfg.hd * itemsize
+    scout = layers * batch * seq_len * cfg.n_kv_heads * cfg.hd  # int8 K
+    hdp = int(scout + (1.0 - hdp_block_sparsity) * kv)
+    return int(kv), hdp

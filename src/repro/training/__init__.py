@@ -1,0 +1,3 @@
+from repro.training import optimizer, train_loop
+
+__all__ = ["optimizer", "train_loop"]

@@ -1,0 +1,109 @@
+"""AdamW with fp32 master weights, global-norm clipping and a
+warmup+cosine schedule — pure JAX (no optax available offline).
+
+Model params stay in the compute dtype (bf16 on TPU -> gradient
+all-reduces move half the bytes); the optimizer keeps fp32 master/m/v,
+ZeRO-1 sharded over `data` by the launcher's out_shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # scan the Adam update over the leading (layer-stack) dim of leaves
+    # with >= this many elements: update temporaries shrink by the stack
+    # length (0.5 GB -> 10 MB per expert matrix on llama4-scout). 0 = off.
+    scan_update_min_elems: int = 0
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(F32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": zeros,
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+        # copy=True: when params are already fp32, astype would alias the
+        # param buffers and the train step's donation would see the same
+        # buffer twice
+        "master": jax.tree.map(lambda p: jnp.array(p, F32, copy=True),
+                               params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(g.astype(F32))) for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(cfg: OptConfig, grads, opt_state, param_dtype
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(F32)
+    b2c = 1.0 - cfg.b2 ** step.astype(F32)
+
+    def upd(g, m, v, w):
+        g = g.astype(F32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        w = w - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                      + cfg.weight_decay * w)
+        return m, v, w
+
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    flat_w = jax.tree.leaves(opt_state["master"])
+    treedef = jax.tree.structure(grads)
+    new_m, new_v, new_w = [], [], []
+    thresh = cfg.scan_update_min_elems
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        if thresh and g.ndim >= 2 and g.size >= thresh:
+            # layer-stacked leaf: scan the update over the leading dim so
+            # only one slice of Adam temporaries is live at a time
+            m2, v2, w2 = jax.lax.map(
+                lambda args: upd(*args), (g, m, v, w))
+        else:
+            m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+    master = jax.tree.unflatten(treedef, new_w)
+    new_params = jax.tree.map(lambda w: w.astype(param_dtype), master)
+    new_state = {"step": step,
+                 "m": jax.tree.unflatten(treedef, new_m),
+                 "v": jax.tree.unflatten(treedef, new_v),
+                 "master": master}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,156 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret mode vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import HDPConfig, hdp_attention
+from repro.core.quant import quantize_fixed
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hdp_block_attn import hdp_block_sparse_attention
+from repro.kernels.hdp_scout import hdp_scout
+from repro.kernels.ops import hdp_attention_tpu
+
+
+def rnd(*shape, seed=0, scale=2.0, dtype=jnp.float32):
+    x = scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ------------------------------------------------------------------ flash
+class TestFlashKernel:
+    @pytest.mark.parametrize("shape", [
+        (1, 2, 128, 64), (2, 3, 256, 128), (1, 1, 160, 64),  # ragged S
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, shape, causal):
+        q, k, v = (rnd(*shape, seed=s) for s in (1, 2, 3))
+        out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                              interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        q, k, v = (rnd(1, 2, 128, 64, seed=s, dtype=dtype) for s in (4, 5, 6))
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol)
+
+
+# ------------------------------------------------------------------ scout
+class TestScoutKernel:
+    @pytest.mark.parametrize("shape", [(1, 2, 128, 64), (2, 2, 256, 32)])
+    @pytest.mark.parametrize("rho", [0.5, -0.5])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, shape, rho, causal):
+        iq = jnp.trunc(rnd(*shape, seed=7, scale=3.0))
+        ik = jnp.trunc(rnd(*shape, seed=8, scale=3.0))
+        theta, keep, th_head = hdp_scout(
+            iq, ik, rho_b=rho, block_q=64, block_k=64, causal=causal,
+            interpret=True)
+        theta_r, keep_r, th_head_r = ref.hdp_scout_ref(
+            iq, ik, block_q=64, block_k=64, rho_b=rho, causal=causal)
+        np.testing.assert_allclose(np.asarray(theta), np.asarray(theta_r),
+                                   rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(keep), np.asarray(keep_r))
+        np.testing.assert_allclose(np.asarray(th_head),
+                                   np.asarray(th_head_r), rtol=1e-5)
+
+    def test_chunked_kv_equals_single_chunk(self):
+        iq = jnp.trunc(rnd(1, 1, 256, 64, seed=9, scale=3.0))
+        ik = jnp.trunc(rnd(1, 1, 256, 64, seed=10, scale=3.0))
+        a = hdp_scout(iq, ik, rho_b=0.5, block_q=64, block_k=64,
+                      chunk_blocks=1, interpret=True)
+        b = hdp_scout(iq, ik, rho_b=0.5, block_q=64, block_k=64,
+                      chunk_blocks=4, interpret=True)
+        for x, y in zip(a, b):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+
+
+# ------------------------------------------------------------- block attn
+class TestBlockAttnKernel:
+    def _mk(self, B=1, H=2, S=256, hd=64, seed=0):
+        q = quantize_fixed(rnd(B, H, S, hd, seed=seed))
+        k = quantize_fixed(rnd(B, H, S, hd, seed=seed + 1))
+        v = rnd(B, H, S, hd, seed=seed + 2)
+        return q, k, v
+
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("approx", [True, False])
+    def test_full_keep_matches_masked_ref(self, causal, approx):
+        q, k, v = self._mk(seed=11)
+        nq = nk = 256 // 64
+        keep = jnp.ones((1, 2, nq, nk), bool)
+        theta = jnp.ones((1, 2, nq, nk))
+        idx, cnt = ref.keep_mask_to_indices(keep, theta, nk)
+        hk = jnp.ones((1, 2), bool)
+        out = hdp_block_sparse_attention(
+            q, k, v, idx, cnt, hk, causal=causal, approx=approx,
+            block_q=64, block_k=64, interpret=True)
+        want = ref.hdp_block_attn_ref(q, k, v, keep, block_q=64, block_k=64,
+                                      causal=causal, approx=approx)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_sparse_keep_matches_ref(self):
+        q, k, v = self._mk(seed=13)
+        iq, ik = jnp.trunc(q), jnp.trunc(k)
+        theta, keep, _ = ref.hdp_scout_ref(iq, ik, block_q=64, block_k=64,
+                                           rho_b=0.5, causal=True)
+        idx, cnt = ref.keep_mask_to_indices(keep, theta, keep.shape[-1])
+        hk = jnp.ones((1, 2), bool)
+        out = hdp_block_sparse_attention(
+            q, k, v, idx, cnt, hk, causal=True, approx=True,
+            block_q=64, block_k=64, interpret=True)
+        want = ref.hdp_block_attn_ref(q, k, v, keep, block_q=64, block_k=64,
+                                      causal=True, approx=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_head_gate_zeroes_output(self):
+        q, k, v = self._mk(seed=17)
+        nq = nk = 256 // 64
+        keep = jnp.ones((1, 2, nq, nk), bool)
+        idx, cnt = ref.keep_mask_to_indices(keep, jnp.ones_like(keep, jnp.float32), nk)
+        hk = jnp.array([[True, False]])
+        out = hdp_block_sparse_attention(q, k, v, idx, cnt, hk, causal=True,
+                                         block_q=64, block_k=64, interpret=True)
+        assert float(jnp.abs(out[0, 1]).max()) == 0.0
+        assert float(jnp.abs(out[0, 0]).max()) > 0.0
+
+
+# ----------------------------------------------------- end-to-end pipeline
+class TestHDPPipeline:
+    def test_pipeline_matches_core_hdp(self):
+        """kernel pipeline == core.hdp_attention with the same TPU blocks."""
+        B, H, S, hd = 1, 2, 256, 64
+        q, k, v = (rnd(B, H, S, hd, seed=s) for s in (19, 20, 21))
+        cfg = HDPConfig(block_q=64, block_k=64, rho_b=0.5, tau_h=0.0,
+                        causal=True, normalize_head_score=True)
+        out_k, stats_k = hdp_attention_tpu(q, k, v, cfg, interpret=True,
+                                           return_stats=True)
+        out_c, stats_c = hdp_attention(q, k, v, cfg)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_c),
+                                   rtol=3e-3, atol=3e-3)
+        assert abs(float(stats_k["head_sparsity"])
+                   - float(stats_c.head_sparsity)) < 1e-6
+
+    def test_max_keep_cap_degrades_gracefully(self):
+        B, H, S, hd = 1, 2, 256, 64
+        q, k, v = (rnd(B, H, S, hd, seed=s) for s in (22, 23, 24))
+        cfg = HDPConfig(block_q=64, block_k=64, rho_b=0.5, causal=True,
+                        normalize_head_score=True)
+        exact, _ = hdp_attention_tpu(q, k, v, cfg, interpret=True)
+        capped, _ = hdp_attention_tpu(q, k, v, cfg, max_keep=2,
+                                      interpret=True)
+        # capped keeps the top-theta blocks; output stays finite & close-ish
+        assert bool(jnp.isfinite(capped).all())
+        cos = float((exact * capped).sum() /
+                    (jnp.linalg.norm(exact) * jnp.linalg.norm(capped) + 1e-9))
+        assert cos > 0.8

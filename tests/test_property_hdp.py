@@ -1,0 +1,168 @@
+"""Hypothesis property tests on HDP's algebraic invariants.
+
+These pin the *identities* the system depends on — quantization algebra,
+threshold monotonicity, row balance, softmax exclusion — over arbitrary
+inputs, not hand-picked examples.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import blocking
+from repro.core.config import HDPConfig
+from repro.core.quant import calib_scale, int_frac_split, quantize_fixed
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+floats = st.floats(min_value=-15.0, max_value=15.0,
+                   allow_nan=False, allow_infinity=False, width=32)
+
+
+def arrays(shape):
+    return hnp.arrays(np.float32, shape, elements=floats)
+
+
+class TestQuantProperties:
+    @given(arrays((8, 8)))
+    @settings(**SETTINGS)
+    def test_split_reconstructs_and_bounds(self, x):
+        xq = quantize_fixed(jnp.asarray(x))
+        i, f = int_frac_split(xq)
+        assert np.allclose(np.asarray(i) + np.asarray(f), np.asarray(xq),
+                           atol=1e-6)
+        assert np.all(np.asarray(i) == np.trunc(np.asarray(i)))
+        assert np.all(np.abs(np.asarray(f)) < 1.0)
+        # signs agree: trunc-toward-zero keeps F on x's side
+        assert np.all(np.asarray(i) * np.asarray(xq) >= 0)
+
+    @given(arrays((6, 6)))
+    @settings(**SETTINGS)
+    def test_quantize_idempotent_and_error_bound(self, x):
+        xq = quantize_fixed(jnp.asarray(x))
+        xqq = quantize_fixed(xq)
+        assert np.allclose(np.asarray(xq), np.asarray(xqq), atol=0)
+        # inside the representable range the error is at most half a step
+        step = 2.0 ** -12
+        inside = np.abs(x) < 15.9
+        err = np.abs(np.asarray(xq) - x)[inside]
+        assert np.all(err <= step / 2 + 1e-9)
+
+    @given(arrays((5, 7)), arrays((6, 7)))
+    @settings(**SETTINGS)
+    def test_three_term_identity(self, x, y):
+        """II + IF + FI == (I+F)(I+F) - FF for any quantized tensors."""
+        xq = quantize_fixed(jnp.asarray(x))
+        yq = quantize_fixed(jnp.asarray(y))
+        ix, fx = int_frac_split(xq)
+        iy, fy = int_frac_split(yq)
+        three = ix @ iy.T + ix @ fy.T + fx @ iy.T
+        ident = xq @ yq.T - fx @ fy.T
+        assert np.allclose(np.asarray(three), np.asarray(ident),
+                           rtol=1e-4, atol=1e-3)
+
+    @given(arrays((4, 16)), st.sampled_from(["max", "rms"]))
+    @settings(**SETTINGS)
+    def test_calibration_in_range(self, x, mode):
+        s = calib_scale(jnp.asarray(x), 4, mode)
+        assert float(s) > 0
+        if mode == "max":
+            scaled = np.abs(x * float(s))
+            assert scaled.max() <= 16.0 + 1e-4
+
+
+class TestThresholdProperties:
+    @given(hnp.arrays(np.float32, (3, 4, 8),
+                      elements=st.floats(0, 100, width=32)),
+           st.floats(-0.95, 0.95))
+    @settings(**SETTINGS)
+    def test_threshold_between_min_and_max(self, theta, rho):
+        t = jnp.asarray(theta)
+        thr = blocking.row_threshold(t, rho)
+        lo = theta.min(-1, keepdims=True) - 1e-4
+        hi = theta.max(-1, keepdims=True) + 1e-4
+        assert np.all(np.asarray(thr) >= lo)
+        assert np.all(np.asarray(thr) <= hi)
+
+    @given(hnp.arrays(np.float32, (2, 5, 6),
+                      elements=st.floats(0, 50, width=32)))
+    @settings(**SETTINGS)
+    def test_threshold_monotone_in_rho(self, theta):
+        t = jnp.asarray(theta)
+        rhos = (-0.8, -0.4, 0.0, 0.4, 0.8)
+        ths = [np.asarray(blocking.row_threshold(t, r)) for r in rhos]
+        for a, b in zip(ths, ths[1:]):
+            assert np.all(b >= a - 1e-4)
+
+    @given(hnp.arrays(np.float32, (3, 6, 8),
+                      elements=st.floats(0, 50, width=32)),
+           st.floats(-0.9, 0.9))
+    @settings(**SETTINGS)
+    def test_row_balance_every_row_keeps_one(self, theta, rho):
+        """Row-balanced sparsity: the max block of every row survives
+        (Theta <= max by construction) — no row is fully pruned. A one-ulp
+        tolerance covers float32 rounding when a row is constant (then
+        Theta == max up to rounding)."""
+        t = jnp.asarray(theta)
+        thr = np.asarray(blocking.row_threshold(t, rho))
+        tol = 1e-4 + 1e-5 * np.abs(thr)
+        keep = theta >= (thr - tol)
+        assert bool(np.all(keep.any(axis=-1)))
+
+
+class TestSoftmaxProperties:
+    @given(hnp.arrays(np.float32, (4, 8), elements=floats),
+           hnp.arrays(np.bool_, (4, 8), elements=st.booleans()))
+    @settings(**SETTINGS)
+    def test_masked_softmax_partition(self, s, keep):
+        p = np.asarray(blocking.masked_softmax(jnp.asarray(s),
+                                               jnp.asarray(keep)))
+        # excluded entries carry zero probability
+        assert np.all(p[~keep] == 0)
+        sums = p.sum(-1)
+        has = keep.any(-1)
+        assert np.allclose(sums[has], 1.0, atol=1e-5)
+        assert np.allclose(sums[~has], 0.0, atol=1e-6)
+
+    @given(hnp.arrays(np.float32, (3, 16),
+                      elements=st.floats(-30, 0, width=32)))
+    @settings(**SETTINGS)
+    def test_poly_exp_relative_error(self, x):
+        e = np.asarray(blocking.poly_exp(jnp.asarray(x)))
+        ref = np.exp(x)
+        assert np.all(np.abs(e - ref) <= 0.04 * ref + 1e-6)
+
+
+class TestNetSparsityProperties:
+    @given(hnp.arrays(np.bool_, (2, 3, 4, 4), elements=st.booleans()),
+           hnp.arrays(np.bool_, (2, 3), elements=st.booleans()))
+    @settings(**SETTINGS)
+    def test_net_sparsity_bounds(self, keep, heads):
+        bsp, hsp, net = blocking.net_sparsity(
+            jnp.asarray(keep), jnp.asarray(heads)[..., None, None])
+        for v in (bsp, hsp, net):
+            assert -1e-6 <= float(v) <= 1.0 + 1e-6
+        # net >= head sparsity (a pruned head prunes all its blocks)
+        assert float(net) >= float(hsp) - 1e-5
+
+
+class TestEndToEndProperties:
+    @given(st.integers(0, 2 ** 31 - 1), st.floats(-0.9, 0.9),
+           st.booleans())
+    @settings(max_examples=10, deadline=None)
+    def test_hdp_attention_finite_and_sane(self, seed, rho, causal):
+        import jax
+        from repro.core.hdp import hdp_attention
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(2, 16, 8)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(2, 16, 8)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(2, 16, 8)), jnp.float32)
+        cfg = HDPConfig(rho_b=rho, causal=causal, tau_h=0.0,
+                        normalize_head_score=True)
+        out, st_ = hdp_attention(q, k, v, cfg)
+        assert bool(jnp.isfinite(out).all())
+        # output is a convex combination of V rows per kept head: bounded
+        assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-4
+        assert 0.0 <= float(st_.net_sparsity) <= 1.0
