@@ -11,6 +11,7 @@
 | kernels        | kernel correctness + FUM bytes |
 | roofline       | dry-run roofline table (§g)    |
 | serving        | end-to-end engine throughput   |
+| serving_paged  | paged vs dense KV cache A/B    |
 
 Accuracy is proxied by top-1 next-token agreement vs the dense model on
 held-out synthetic data (no GLUE checkpoints offline — substitution
@@ -45,6 +46,46 @@ def bench_serving(quick: bool = False):
     return rows
 
 
+def bench_serving_paged(quick: bool = False):
+    """Paged vs dense cache backend A/B: decode tok/s + resident cache bytes.
+
+    With HDP enabled the paged backend stores the int8 scout copy but
+    allocates pages per request (prompt + budget) instead of max_len per
+    slot, and its decode gathers only scout-surviving pages — cache bytes
+    must come out <= the dense per-slot layout, tokens identical (the
+    write-time scout pins calib="none"; see DESIGN notes in
+    serving/engine.py).
+    """
+    from repro.launch import serve
+
+    rows = []
+    for arch in ("qwen2-1.5b", "granite-8b"):
+        for backend in ("paged", "dense"):
+            args = serve.build_parser().parse_args(
+                ["--arch", arch, "--requests", "4" if quick else "8",
+                 "--max-new", "4" if quick else "6",
+                 "--cache-backend", backend, "--calib", "none"])
+            out = serve.run(args)
+            rows.append({"arch": arch, "backend": backend, **out})
+    print("# serving paged-vs-dense (reduced configs, HDP on, calib=none)")
+    hdr = [h for h in rows[0] if h != "requests"]
+    print(",".join(str(h) for h in hdr))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in hdr))
+    by_arch = {}
+    for r in rows:
+        by_arch.setdefault(r["arch"], {})[r["backend"]] = r
+    for arch, pair in by_arch.items():
+        p, d = pair["paged"], pair["dense"]
+        assert p["cache_bytes"] <= d["cache_bytes"], \
+            f"{arch}: paged cache {p['cache_bytes']} > dense {d['cache_bytes']}"
+        print(f"## {arch}: paged cache {p['cache_bytes']}B <= "
+              f"dense {d['cache_bytes']}B "
+              f"({1 - p['cache_bytes'] / max(d['cache_bytes'], 1):.0%} less), "
+              f"page_sparsity {p['page_sparsity']}")
+    return rows
+
+
 BENCHES = {}
 
 
@@ -61,6 +102,7 @@ def _register():
         "roofline": roofline_table.main,
         "decode_roofline": decode_roofline.main,
         "serving": bench_serving,
+        "serving_paged": bench_serving_paged,
     })
 
 

@@ -26,26 +26,30 @@ args = ap.parse_args()
 cfg, params = common.train_model(args.scale, steps=300)
 from repro.core.config import HDPConfig  # noqa: E402
 
+# calib="none": the paged serving backend quantizes its scout copy at
+# cache-write time, so the static grid is the regime it operates in
 hdp = HDPConfig(rho_b=args.rho_b, block_q=2, block_k=2, causal=True,
-                head_pruning=True, tau_h=0.0, normalize_head_score=True)
+                head_pruning=True, tau_h=0.0, normalize_head_score=True,
+                calib="none")
 
 rng = np.random.default_rng(0)
 prompts = [rng.integers(1, cfg.vocab_size, size=int(rng.integers(6, 40)))
            .tolist() for _ in range(args.requests)]
 
 
-def serve(with_hdp: bool):
+def serve(with_hdp: bool, cache_backend: str = "paged"):
     c = cfg.replace(hdp=hdp) if with_hdp else cfg
     eng = Engine(c, params=params, max_batch=4, max_len=96,
-                 prefill_buckets=(16, 32, 64), collect_stats=with_hdp)
+                 prefill_buckets=(16, 32, 64), collect_stats=with_hdp,
+                 cache_backend=cache_backend)
     for uid, p in enumerate(prompts):
         eng.submit(Request(uid, p, max_new_tokens=args.max_new))
     res = eng.run()
     return res, eng.summary()
 
 
-res_hdp, s_hdp = serve(True)
-res_dense, s_dense = serve(False)
+res_hdp, s_hdp = serve(True)                      # paged + HDP (FUM gather)
+res_dense, s_dense = serve(False, "dense")        # dense slots, no pruning
 
 agree = np.mean([
     np.mean(np.asarray(res_hdp[u].tokens) == np.asarray(res_dense[u].tokens))
@@ -57,8 +61,12 @@ print(f"\nserving bench-{args.scale} (trained in-framework), "
       f"{args.requests} requests x {args.max_new} new tokens")
 print(f"  HDP  : {s_hdp.get('decode_tok_s', 0):7.1f} tok/s   "
       f"block sparsity {s_hdp['block_sparsity']:.2f}  "
-      f"head sparsity {s_hdp['head_sparsity']:.2f}")
+      f"head sparsity {s_hdp['head_sparsity']:.2f}  "
+      f"page sparsity {s_hdp['page_sparsity']:.2f}")
 print(f"  dense: {s_dense.get('decode_tok_s', 0):7.1f} tok/s")
+print(f"  KV cache resident: paged {s_hdp['cache_bytes'] / 1e3:.1f} KB "
+      f"(page size {s_hdp['page_size']}) vs dense slots "
+      f"{s_dense['cache_bytes'] / 1e3:.1f} KB")
 print(f"  generated-token agreement HDP vs dense: {agree:.3f}")
 print(f"  FUM KV-read saving at this sparsity (32k ctx, per seq/step): "
       f"{dense_b / 1e6:.1f} MB -> {hdp_b / 1e6:.1f} MB "

@@ -34,6 +34,43 @@ def calibrated_split(x: jnp.ndarray, cfg: HDPConfig):
     return s, xq, i, f
 
 
+def decode_scout(int_scores: jnp.ndarray, valid: jnp.ndarray, cfg: HDPConfig):
+    """Decode-shaped integer scout: one block row per head over KV pages.
+
+    ``int_scores`` [..., Sq, Sk] are integer-part attention scores for a
+    (small) decode query group; Sk must be a multiple of ``cfg.block_k``.
+    The whole query extent pools into a single row of Sk/block_k blocks —
+    with a block-paged KV cache these blocks ARE the cache pages, so the
+    keep mask doubles as the page fetch list (Fetch-Upon-Mask). ``valid``
+    is a positionally-broadcastable bool mask [..., Sq, Sk].
+
+    Returns (keep, bvalid, theta, theta_head, head_kept):
+      keep [..., nk] bool      — pages that survive block pruning
+      bvalid [..., nk] bool    — pages with any valid position
+      theta [..., nk] f32      — block importances
+      theta_head [...]         — head importances (normalized per cfg)
+      head_kept [...] bool     — early head gate
+    """
+    bk = cfg.block_k
+    s = jnp.where(valid, int_scores, 0.0)
+    *lead, q, sk = s.shape
+    theta = jnp.abs(s.reshape(*lead, q, sk // bk, bk)).sum(axis=(-3, -1))
+    *vlead, vq, _ = valid.shape
+    bvalid = valid.reshape(*vlead, vq, sk // bk, bk).any(axis=(-3, -1))
+    if cfg.block_pruning:
+        thr = blocking.row_threshold(theta, cfg.rho_b, bvalid)
+        keep = blocking.block_keep_mask(theta, thr, bvalid)
+    else:
+        keep = jnp.broadcast_to(bvalid, theta.shape)
+    theta_head = jnp.where(bvalid, theta, 0.0).sum(-1)
+    if cfg.normalize_head_score:
+        theta_head = theta_head / jnp.maximum(
+            valid.sum(axis=(-2, -1)).astype(jnp.float32), 1.0)
+    head_kept = (theta_head > cfg.tau_h) if cfg.head_pruning \
+        else jnp.ones_like(theta_head, bool)
+    return keep, bvalid, theta, theta_head, head_kept
+
+
 @dataclasses.dataclass
 class HDPStats:
     """Diagnostics emitted by an HDP attention call (all jnp arrays)."""

@@ -2,6 +2,7 @@
 
 Validated in interpret mode on CPU; compiled natively on TPU.
 """
+from repro.kernels.compat import tpu_compiler_params
 from repro.kernels.ops import flash, hdp_attention_tpu
 
-__all__ = ["flash", "hdp_attention_tpu"]
+__all__ = ["flash", "hdp_attention_tpu", "tpu_compiler_params"]

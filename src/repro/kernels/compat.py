@@ -1,0 +1,19 @@
+"""Pallas-TPU API compatibility across JAX versions.
+
+`pltpu.TPUCompilerParams` was renamed to `pltpu.CompilerParams` upstream
+(jax-ml/jax #21523 lineage); depending on the pinned JAX, exactly one of
+the two names exists. Every kernel in this package goes through
+:func:`tpu_compiler_params` so the repo runs on either side of the rename.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+#: The compiler-params class available in the running JAX.
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU compiler params under whichever name this JAX exposes."""
+    return CompilerParams(**kwargs)

@@ -22,14 +22,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 F32 = jnp.float32
 NEG = -1e30
 
 
-def _kernel(idx_ref, cnt_ref, head_ref, sscale_ref,  # scalar prefetch
+def _kernel(idx_ref, cnt_ref, head_ref, sscale_ref, len_ref,  # scalar prefetch
             q_ref, k_ref, v_ref, o_ref,            # tensors
             acc_ref, m_ref, l_ref,                 # scratch
-            *, scale, causal, approx, block_q, block_k, max_keep, sk_true):
+            *, scale, causal, approx, block_q, block_k, max_keep):
     b = pl.program_id(0)
     i = pl.program_id(1)
     j = pl.program_id(2)
@@ -59,7 +61,7 @@ def _kernel(idx_ref, cnt_ref, head_ref, sscale_ref,  # scalar prefetch
         rows = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         cols = kv_blk * block_k + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
-        valid = cols < sk_true
+        valid = cols < len_ref[b]
         if causal:
             valid = valid & (rows >= cols)
         s = jnp.where(valid, s, NEG)
@@ -89,11 +91,13 @@ def _kernel(idx_ref, cnt_ref, head_ref, sscale_ref,  # scalar prefetch
 def hdp_block_sparse_attention(q, k, v, kv_idx, counts, head_kept, *,
                                causal: bool = True, approx: bool = True,
                                block_q: int = 128, block_k: int = 128,
-                               score_scale=None,
+                               score_scale=None, kv_len=None,
                                interpret: bool = False):
     """q,k,v [B,H,S,hd]; kv_idx [B,H,nq,max_keep] int32; counts [B,H,nq];
     head_kept [B,H] (bool/int); score_scale: optional calibration rescale
-    1/(s_q*s_k) applied to scores. Returns [B,H,Sq,hd]."""
+    1/(s_q*s_k) applied to scores; kv_len [B,H] optional per-row valid KV
+    length (serving decode: cache positions beyond the current token are
+    masked — defaults to the full Sk). Returns [B,H,Sq,hd]."""
     B, H, Sq, hd = q.shape
     Sk = k.shape[2]
     sqp = -(-Sq // block_q) * block_q
@@ -111,24 +115,26 @@ def hdp_block_sparse_attention(q, k, v, kv_idx, counts, head_kept, *,
     hk = head_kept.reshape(B * H).astype(jnp.int32)
     ss = jnp.asarray(1.0 if score_scale is None else score_scale,
                      F32).reshape(1)
+    lens = (jnp.full((B * H,), Sk, jnp.int32) if kv_len is None
+            else kv_len.reshape(B * H).astype(jnp.int32))
 
     kernel = functools.partial(
         _kernel, scale=1.0 / (hd ** 0.5), causal=causal, approx=approx,
-        block_q=block_q, block_k=block_k, max_keep=max_keep, sk_true=Sk)
+        block_q=block_q, block_k=block_k, max_keep=max_keep)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=5,
         grid=(B * H, nq, max_keep),
         in_specs=[
             pl.BlockSpec((1, block_q, hd),
-                         lambda b, i, j, idx, c, h, s: (b, i, 0)),
+                         lambda b, i, j, idx, c, h, s, le: (b, i, 0)),
             pl.BlockSpec((1, block_k, hd),
-                         lambda b, i, j, idx, c, h, s: (b, idx[b, i, j], 0)),
+                         lambda b, i, j, idx, c, h, s, le: (b, idx[b, i, j], 0)),
             pl.BlockSpec((1, block_k, hd),
-                         lambda b, i, j, idx, c, h, s: (b, idx[b, i, j], 0)),
+                         lambda b, i, j, idx, c, h, s, le: (b, idx[b, i, j], 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, hd),
-                               lambda b, i, j, idx, c, h, s: (b, i, 0)),
+                               lambda b, i, j, idx, c, h, s, le: (b, i, 0)),
         scratch_shapes=[
             pltpu.VMEM((block_q, hd), F32),
             pltpu.VMEM((block_q, 1), F32),
@@ -139,8 +145,8 @@ def hdp_block_sparse_attention(q, k, v, kv_idx, counts, head_kept, *,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B * H, sqp, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(idx, cnt, hk, ss, qp, kp, vp)
+    )(idx, cnt, hk, ss, lens, qp, kp, vp)
     return out.reshape(B, H, sqp, hd)[:, :, :Sq]

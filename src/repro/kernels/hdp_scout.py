@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 F32 = jnp.float32
 BIG = 1e30
 
@@ -112,7 +114,7 @@ def hdp_scout(iq, ik, *, rho_b: float, block_q: int = 128,
             jax.ShapeDtypeStruct((B * H, nq, nk_pad), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((1, nk_pad), F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(iqp, ikp)

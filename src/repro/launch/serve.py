@@ -37,6 +37,17 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--rho-b", type=float, default=None)
     ap.add_argument("--tau-h", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache-backend", default="auto",
+                    choices=["auto", "paged", "dense"],
+                    help="paged = block-paged KV cache (FUM page gather); "
+                         "dense = per-slot contiguous reference")
+    ap.add_argument("--attn-backend", default="xla",
+                    choices=["xla", "pallas"],
+                    help="paged HDP decode implementation (pallas runs the "
+                         "block-sparse kernel, interpret mode off-TPU)")
+    ap.add_argument("--calib", default=None,
+                    help="override hdp calibration (the paged scout stores "
+                         "a write-time int8 copy, i.e. calib-free)")
     return ap
 
 
@@ -52,11 +63,15 @@ def run(args) -> dict:
             hdp = dataclasses.replace(hdp, rho_b=args.rho_b)
         if args.tau_h is not None:
             hdp = dataclasses.replace(hdp, tau_h=args.tau_h)
+        if args.calib is not None:
+            hdp = dataclasses.replace(hdp, calib=args.calib)
         cfg = cfg.replace(hdp=hdp)
 
     eng = Engine(cfg, max_batch=args.max_batch, max_len=args.max_len,
                  prefill_buckets=(16, 32, 64),
-                 collect_stats=not args.no_hdp)
+                 collect_stats=not args.no_hdp,
+                 cache_backend=args.cache_backend,
+                 attn_backend=args.attn_backend)
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):
         plen = int(rng.integers(4, min(48, args.max_len - args.max_new)))
@@ -69,12 +84,15 @@ def run(args) -> dict:
     out = {
         "requests": args.requests,
         "completed": done,
+        "backend": s["cache_backend"],
         "decode_tok_s": round(s.get("decode_tok_s", 0.0), 2),
         "prefill_s_total": round(s["prefill_s"], 3),
+        "prefill_calls": s["prefill_calls"],
         "decode_steps": s["decode_steps"],
         "block_sparsity": round(s["block_sparsity"], 4),
         "head_sparsity": round(s["head_sparsity"], 4),
-        "cache_mb": round(s["cache_bytes"] / 1e6, 2),
+        "page_sparsity": round(s["page_sparsity"], 4),
+        "cache_bytes": s["cache_bytes"],
     }
     log.info("serve summary: %s", out)
     return out

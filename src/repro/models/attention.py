@@ -23,7 +23,8 @@ import jax.numpy as jnp
 
 from repro.core import blocking
 from repro.core.config import HDPConfig
-from repro.core.hdp import calibrated_split
+from repro.core.hdp import calibrated_split, decode_scout
+from repro.core.quant import quantize_and_split, quantize_fixed
 from repro.distribution.sharding import shard_activation as shd
 from repro.models import layers as L
 
@@ -284,6 +285,38 @@ def hdp_prefill_attention(q, k, v, *, q_pos, k_pos, hdp: HDPConfig,
     return out.astype(q.dtype), stats
 
 
+def _approx_block_attention(qq, fq, kq, fk, v, keep, valid, head_kept, *,
+                            block_k, scale, approx):
+    """Shared decode stage: approximate scores (QK^T - FQ FK^T) on blocks
+    surviving `keep`, exclusion softmax, early head gate.
+
+    `scale` folds 1/sqrt(hd) and any calibration rescale; `block_k` is the
+    width the [..., nk] keep mask expands by to match the score columns."""
+    s = jnp.einsum("bngqh,bsnh->bngqs", qq, kq, preferred_element_type=F32)
+    if approx:
+        s = s - jnp.einsum("bngqh,bsnh->bngqs", fq, fk,
+                           preferred_element_type=F32)
+    s = s * scale
+    keep_e = jnp.repeat(keep, block_k, axis=-1)[..., None, :] & valid
+    s = jnp.where(keep_e, s, _NEG)
+    mx = s.max(-1, keepdims=True)
+    p = jnp.exp(s - mx)
+    p = jnp.where(keep_e, p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bngqs,bsnh->bngqh", p.astype(v.dtype), v,
+                     preferred_element_type=F32)
+    return out * head_kept[..., None, None].astype(out.dtype)
+
+
+def _block_sparsity_stats(keep, bvalid, head_kept):
+    """Pruned fractions over *valid* blocks (bvalid broadcast to keep)."""
+    kept = (keep & bvalid).astype(F32).sum()
+    tot = jnp.maximum(
+        jnp.broadcast_to(bvalid, keep.shape).astype(F32).sum(), 1.0)
+    return {"block_sparsity": 1.0 - kept / tot,
+            "head_sparsity": 1.0 - head_kept.astype(F32).mean()}
+
+
 def hdp_decode_attention(q, k, v, *, q_pos, k_pos, hdp: HDPConfig,
                          window: int = 0, return_stats: bool = False):
     """KV-page pruning for decode (TPU adaptation, DESIGN.md §2).
@@ -306,40 +339,126 @@ def hdp_decode_attention(q, k, v, *, q_pos, k_pos, hdp: HDPConfig,
     s_int = jnp.einsum("bngqh,bsnh->bngqs", iq, ik, preferred_element_type=F32)
     valid = _mask_bias(q_pos, kp, hdp.causal, window)
     # the (small) query group is pooled into one block row per head
-    theta, bvalid = _block_theta(s_int, valid, bk)
-    if hdp.block_pruning:
-        thr = blocking.row_threshold(theta, hdp.rho_b, bvalid)
-        keep = blocking.block_keep_mask(theta, thr, bvalid)
-    else:
-        keep = bvalid
-    theta_head = jnp.where(bvalid, theta, 0.0).sum(-1)
-    if hdp.normalize_head_score:
-        theta_head = theta_head / jnp.maximum(
-            valid.sum(axis=(-2, -1)).astype(F32), 1.0)
-    head_kept = (theta_head > hdp.tau_h) if hdp.head_pruning \
-        else jnp.ones_like(theta_head, bool)
+    keep, bvalid, theta, theta_head, head_kept = decode_scout(
+        s_int, valid, hdp)
 
-    s = jnp.einsum("bngqh,bsnh->bngqs", qq, kq, preferred_element_type=F32)
-    if hdp.approx:
-        s = s - jnp.einsum("bngqh,bsnh->bngqs", fq, fk,
-                           preferred_element_type=F32)
-    s = s * (scale * score_rescale)
-    keep_e = jnp.repeat(keep, bk, axis=-1)[..., None, :] & valid
-    s = jnp.where(keep_e, s, _NEG)
-    mx = s.max(-1, keepdims=True)
-    p = jnp.exp(s - mx)
-    p = jnp.where(keep_e, p, 0.0)
-    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
-    out = jnp.einsum("bngqs,bsnh->bngqh", p.astype(vp.dtype), vp,
-                     preferred_element_type=F32)
-    out = out * head_kept[..., None, None].astype(out.dtype)
+    out = _approx_block_attention(qq, fq, kq, fk, vp, keep, valid, head_kept,
+                                  block_k=bk, scale=scale * score_rescale,
+                                  approx=hdp.approx)
 
     stats = None
     if return_stats:
-        kept = (keep & bvalid).astype(F32).sum() / (B * N * G)
-        tot = jnp.maximum(bvalid.astype(F32).sum(), 1.0)
-        stats = {"block_sparsity": 1.0 - kept / tot,
-                 "head_sparsity": 1.0 - head_kept.astype(F32).mean(),
+        stats = {**_block_sparsity_stats(keep, bvalid, head_kept),
+                 "theta_head": theta_head}
+    return out.astype(q.dtype), stats
+
+
+def _fixed_split(x, hdp: HDPConfig):
+    """Calibration-free fixed-point split (xq, I, F).
+
+    The paged serving cache stores the scout copy of K at *write* time, so
+    the grid must be static (the paper's co-processor model: the host hands
+    over pre-quantized fixed-point tensors). Elementwise by construction —
+    values in pruned pages can never leak into kept positions through a
+    data-dependent scale.
+    """
+    return quantize_and_split(x.astype(F32), hdp.int_bits, hdp.frac_bits)
+
+
+def scout_int8(k, hdp: HDPConfig):
+    """Write-time int8 scout copy of K (what FUM always streams)."""
+    return _fixed_split(k, hdp)[1].astype(jnp.int8)
+
+
+def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
+                               q_pos, k_pos, hdp: HDPConfig, window: int = 0,
+                               return_stats: bool = False,
+                               attn_backend: str = "xla"):
+    """HDP decode over a block-paged KV cache — the FUM dataflow in XLA.
+
+    q [B,N,G,Sq,hd]; k/v_pool [P,ps,N,hd] page pools (page 0 is the
+    reserved scratch page); ik_pool [P,ps,N,hd] int8 scout copy of K;
+    table [B,nP] int32 page table (0-padded).
+
+    Stage 1 streams the int8 scout copy for EVERY allocated page (the
+    paper's always-read integer pass), pools it into per-page importances
+    and derives the keep mask + early head gate (core.hdp.decode_scout).
+    Stage 2 gathers full-precision K/V only for surviving pages — pruned
+    pages' gather indices are redirected to the scratch page, so their
+    memory is never touched (the TPU kernel analogue never DMAs them).
+    Stage 3 runs the approximate attention QK^T - FQ FK^T on the gathered
+    pages with the keep mask excluded from the softmax.
+
+    attn_backend="pallas" routes stage 3 through the
+    ``hdp_block_sparse_attention`` Pallas kernel (interpret mode off-TPU);
+    "xla" is the pure-jnp fallback with identical semantics.
+    """
+    B, N, G, Sq, hd = q.shape
+    P, ps, _, _ = k_pool.shape
+    nP = table.shape[1]
+    Sk = nP * ps
+    scale = 1.0 / (hd ** 0.5)
+
+    # ---- stage 1: integer scout on the always-streamed int8 copy ----
+    ik = ik_pool[table].reshape(B, Sk, N, hd).astype(F32)
+    qq, iq, fq = _fixed_split(q, hdp)
+    s_int = jnp.einsum("bngqh,bsnh->bngqs", iq, ik, preferred_element_type=F32)
+    valid = _mask_bias(q_pos, k_pos, hdp.causal, window)
+    keep, bvalid, theta, theta_head, head_kept = decode_scout(
+        s_int, valid, hdp)
+
+    # ---- stage 2: fetch-upon-mask page gather ----
+    # page fetch granularity is OR-over-heads (a page holds all kv heads);
+    # the per-head keep mask still applies inside the softmax below. Early
+    # head-gated heads (output zeroed) don't demand their pages at all.
+    fetched = (keep & head_kept[..., None]).any(axis=(1, 2))  # [B, nP]
+    gather_idx = jnp.where(fetched, table, 0)             # pruned -> scratch
+    k = k_pool[gather_idx].reshape(B, Sk, N, hd)
+    v = v_pool[gather_idx].reshape(B, Sk, N, hd)
+
+    # ---- stage 3: approximate attention on surviving pages ----
+    if attn_backend == "pallas" and window:
+        # the kernel's per-row validity is an upper bound (cols < kv_len)
+        # and cannot express the sliding-window lower bound; fall back to
+        # the jnp path rather than silently attending out-of-window keys
+        attn_backend = "xla"
+    if attn_backend == "pallas":
+        from repro.kernels.hdp_block_attn import hdp_block_sparse_attention
+        from repro.kernels.ops import _auto_interpret
+        from repro.kernels.ref import keep_mask_to_indices
+
+        H = N * G
+        def per_head(x):  # [B,Sk,N,hd] -> [B,H,Sk,hd]
+            xh = jnp.repeat(x.transpose(0, 2, 1, 3), G, axis=1)
+            return xh
+        kq_h = per_head(quantize_fixed(k.astype(F32), hdp.int_bits,
+                                       hdp.frac_bits))
+        v_h = per_head(v)
+        qq_h = qq.reshape(B, H, Sq, hd)
+        keep_h = keep.reshape(B, H, 1, nP)
+        kv_idx, counts = keep_mask_to_indices(
+            keep_h, theta.reshape(B, H, 1, nP), nP)
+        # per-row validity: cols <= current position (replaces the kernel's
+        # aligned-self-attention causal mask, wrong for cached decode)
+        lens = (q_pos.reshape(B)[:, None] + 1) * jnp.ones((B, H), jnp.int32)
+        out = hdp_block_sparse_attention(
+            qq_h, kq_h, v_h, kv_idx, counts, head_kept.reshape(B, H),
+            causal=False, approx=hdp.approx, block_q=max(8, Sq),
+            block_k=ps, score_scale=1.0, kv_len=lens,
+            interpret=_auto_interpret(None))
+        out = out.reshape(B, N, G, Sq, hd)
+    else:
+        kq, _, fk = _fixed_split(k, hdp)
+        out = _approx_block_attention(qq, fq, kq, fk, v, keep, valid,
+                                      head_kept, block_k=ps, scale=scale,
+                                      approx=hdp.approx)
+
+    stats = None
+    if return_stats:
+        alloc = jnp.maximum((table > 0).astype(F32).sum(), 1.0)
+        stats = {**_block_sparsity_stats(keep, bvalid, head_kept),
+                 "page_sparsity": 1.0 - jnp.minimum(
+                     (fetched & (table > 0)).astype(F32).sum() / alloc, 1.0),
                  "theta_head": theta_head}
     return out.astype(q.dtype), stats
 
@@ -347,7 +466,8 @@ def hdp_decode_attention(q, k, v, *, q_pos, k_pos, hdp: HDPConfig,
 # --------------------------------------------------------------- full layer
 def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
                enc_out=None, causal: bool = True, static_cache: bool = False,
-               collect_stats: bool = False) -> Tuple[Any, Any, Any]:
+               collect_stats: bool = False, page_table=None,
+               attn_backend: str = "xla") -> Tuple[Any, Any, Any]:
     """Full MHA layer: project, rope, (HDP-)attend, output-project.
 
     mode: train | prefill | decode. cache: {"k","v"} [B,Smax,N,hd] (+ pos
@@ -393,7 +513,32 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
         if cfg.pos_emb == "rope" and enc_out is None:
             k = L.apply_rope(k, positions, cfg.rope_theta)
 
-        if cache is not None:
+        if cache is not None and "k_pages" in cache:
+            # block-paged serving cache (decode only): scatter the token's
+            # K/V (+ int8 scout copy) into its slot's current page, then
+            # attend over the page pool through the page table.
+            assert mode == "decode" and positions.ndim == 2, \
+                "paged cache is a decode-time serving layout"
+            ps = cache["k_pages"].shape[1]
+            pos0 = positions[:, 0]
+            pidx = jnp.take_along_axis(
+                page_table, (pos0 // ps)[:, None], axis=1)[:, 0]
+            off = pos0 % ps
+            new_cache = {
+                "k_pages": cache["k_pages"].at[pidx, off].set(
+                    k[:, 0].astype(cache["k_pages"].dtype)),
+                "v_pages": cache["v_pages"].at[pidx, off].set(
+                    v[:, 0].astype(cache["v_pages"].dtype)),
+            }
+            if "k_scout" in cache:
+                new_cache["k_scout"] = cache["k_scout"].at[pidx, off].set(
+                    scout_int8(k[:, 0], cfg.hdp))
+            nP = page_table.shape[1]
+            ar = jnp.arange(nP * ps)
+            k_pos = jnp.where(ar[None, :] <= positions[:, -1:], ar, -1)
+            k_pos = k_pos[:, None, None, :]              # [B,1,1,nP*ps]
+            k_full = v_full = None  # gathered lazily (FUM) below
+        elif cache is not None:
             if positions.ndim == 2 and enc_out is None:
                 # per-slot positions (continuous batching): each sequence
                 # writes its cache at its own offset
@@ -435,7 +580,24 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
                and (mode != "train" or hdp.apply_in_training))
     stats = None
     is_cross = enc_out is not None or static_cache
-    if use_hdp:
+    if cache is not None and "k_pages" in cache:
+        if use_hdp:
+            o, stats = hdp_paged_decode_attention(
+                qg, new_cache["k_pages"], new_cache["v_pages"],
+                new_cache["k_scout"], page_table, q_pos=q_pos, k_pos=k_pos,
+                hdp=hdp.replace(causal=causal), window=cfg.sliding_window,
+                return_stats=collect_stats, attn_backend=attn_backend)
+        else:
+            B_, nP_ = page_table.shape
+            ps_ = new_cache["k_pages"].shape[1]
+            k_full = new_cache["k_pages"][page_table].reshape(
+                B_, nP_ * ps_, N, hd)
+            v_full = new_cache["v_pages"][page_table].reshape(
+                B_, nP_ * ps_, N, hd)
+            o = decode_attention(qg, k_full, v_full, q_pos=q_pos,
+                                 k_pos=k_pos, window=cfg.sliding_window,
+                                 causal=True)
+    elif use_hdp:
         hdp = hdp.replace(causal=causal and not is_cross)
         if mode == "decode":
             o, stats = hdp_decode_attention(
@@ -449,7 +611,10 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
         o = decode_attention(qg, k_full, v_full, q_pos=q_pos, k_pos=k_pos,
                              window=0 if is_cross else cfg.sliding_window,
                              causal=not is_cross)
-    elif cfg.sliding_window and not is_cross and S > cfg.sliding_window:
+    elif (cfg.sliding_window and not is_cross and S > cfg.sliding_window
+          and k_full.shape[1] == S):
+        # block-local path needs aligned q/k; chunked serving prefill
+        # (q = one chunk, k = whole cache) windows via chunked_attention
         o = local_attention(qg, k_full, v_full, q_pos=q_pos, k_pos=k_pos,
                             window=cfg.sliding_window, causal=causal)
     else:

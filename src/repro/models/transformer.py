@@ -46,11 +46,13 @@ def init_params(cfg, rng) -> Tuple[Dict, Dict]:
             {"embed": emb_s, "layers": layers_s, "final_norm": fin_s})
 
 
-def _block(cfg, lp, x, *, mode, positions, cache, collect_stats):
+def _block(cfg, lp, x, *, mode, positions, cache, collect_stats,
+           page_table=None, attn_backend="xla"):
     h = L.apply_norm(cfg, lp["ln1"], x)
     a, new_cache, stats = attn_apply(
         cfg, lp["attn"], h, mode=mode, positions=positions, cache=cache,
-        collect_stats=collect_stats)
+        collect_stats=collect_stats, page_table=page_table,
+        attn_backend=attn_backend)
     x = x + a
     h = L.apply_norm(cfg, lp["ln2"], x)
     if cfg.n_experts:
@@ -60,7 +62,8 @@ def _block(cfg, lp, x, *, mode, positions, cache, collect_stats):
     return x + m, new_cache, stats, aux
 
 
-def _stack(cfg, params, x, *, mode, positions, cache, collect_stats):
+def _stack(cfg, params, x, *, mode, positions, cache, collect_stats,
+           page_table=None, attn_backend="xla"):
     """lax.scan over stacked layers; returns (x, new_cache, stats, aux).
 
     The KV cache rides in the scan CARRY with per-layer in-place
@@ -87,7 +90,9 @@ def _stack(cfg, params, x, *, mode, positions, cache, collect_stats):
             lambda c: jax.lax.dynamic_index_in_dim(c, li, 0, keepdims=False),
             cache_all)
         y, nc, st, aux = _block(cfg, lp, y, mode=mode, positions=positions,
-                                cache=lc, collect_stats=collect_stats)
+                                cache=lc, collect_stats=collect_stats,
+                                page_table=page_table,
+                                attn_backend=attn_backend)
         cache_all = jax.tree.map(
             lambda c, n: jax.lax.dynamic_update_index_in_dim(
                 c, n.astype(c.dtype), li, 0),
@@ -132,11 +137,16 @@ def cache_specs(cfg) -> Dict:
     return {"k": ax, "v": ax}
 
 
-def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False):
-    """Run the prompt; fills cache, returns last-position logits."""
+def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False,
+                  pos_offset=0):
+    """Run the prompt; fills cache, returns last-position logits.
+
+    pos_offset (scalar, may be traced): absolute position of tokens[:, 0] —
+    nonzero for chunked prefill, where each chunk appends to the cache
+    behind the previous ones."""
     tokens = batch["tokens"]
     x = _embed_in(cfg, params, tokens)
-    positions = jnp.arange(tokens.shape[1])
+    positions = pos_offset + jnp.arange(tokens.shape[1])
     x, new_cache, stats, _ = _stack(cfg, params, x, mode="prefill",
                                     positions=positions, cache=cache,
                                     collect_stats=collect_stats)
@@ -145,15 +155,22 @@ def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False):
     return logits, new_cache, stats
 
 
-def apply_decode(cfg, params, token, cache, pos, *, collect_stats: bool = False):
-    """One decode step. token [B,1]; pos scalar int32 (aligned batch)."""
+def apply_decode(cfg, params, token, cache, pos, *, collect_stats: bool = False,
+                 page_table=None, attn_backend: str = "xla"):
+    """One decode step. token [B,1]; pos scalar int32 (aligned batch).
+
+    page_table [B, nP] routes the step through the block-paged serving
+    cache ({"k_pages","v_pages"[,"k_scout"]} leaves) instead of the dense
+    contiguous layout."""
     x = L.embed_tokens(params["embed"], token, cfg.d_model)
     if cfg.pos_emb == "sinusoidal":
         x = x + L.sinusoidal_pos(1, cfg.d_model, offset=pos).astype(x.dtype)
     positions = pos[None] if jnp.ndim(pos) == 0 else pos
     x, new_cache, stats, _ = _stack(cfg, params, x, mode="decode",
                                     positions=positions, cache=cache,
-                                    collect_stats=collect_stats)
+                                    collect_stats=collect_stats,
+                                    page_table=page_table,
+                                    attn_backend=attn_backend)
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = L.lm_logits(params["embed"], x)
     return logits, new_cache, stats

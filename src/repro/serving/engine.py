@@ -1,17 +1,40 @@
-"""Batched serving engine with HDP: prefill/decode, continuous batching.
+"""Batched serving engine with HDP: paged KV cache, batched prefill,
+continuous batching.
 
-The engine keeps a fixed pool of ``max_batch`` decode slots. New requests
-are prefilled one at a time (prompt padded up to the nearest *bucket* so
-the prefill jit-cache stays small), their KV/state cache inserted into a
-free slot, and the batched decode step advances every active slot with
-its own position (per-slot positions thread through
-``attention.attn_apply``). Finished slots (EOS or per-request token
-budget) are freed and immediately refillable — continuous batching.
+The engine keeps a fixed pool of ``max_batch`` decode slots over one of
+two cache backends:
+
+* ``paged`` (default for transformer families) — a block-paged KV cache
+  (`kv_cache.PagedKVCache`): one shared page pool + per-slot page tables,
+  page size aligned to HDP's ``block_k`` so cache pages coincide with the
+  scout's pruning blocks. Decode reuses the integer scout's per-row keep
+  mask to gather only surviving pages — pruned pages are never touched,
+  mirroring the FUM kernel's never-DMA'd dataflow — and pages are
+  allocated per request (prompt + budget), not per ``max_len`` slot.
+* ``dense`` (recurrent families, and the reference A/B) — the seed
+  per-slot contiguous `SlotCache`.
+
+Admission is **batched bucketed prefill**: queued requests are grouped by
+pad-bucket and stacked at exact batch size into one jitted prefill call
+per group (the jit cache stays bounded by max_batch entries per bucket).
+Prompts longer than the largest bucket run **chunked prefill**:
+bucket-sized chunks appended at a position offset, so arbitrarily long
+prompts (up to ``max_len``) prefill through the same jit entries.
+Finished slots free their pages and are immediately refillable —
+continuous batching.
+
+The paged backend pins ``hdp.calib = "none"``: its scout copy of K is
+quantized at cache-write time, so a data-dependent calibration scale
+cannot be honored — the static fixed-point grid applies to prefill and
+decode alike (the paper's co-processor model). Under that grid, paged
+decode is token-for-token identical to the dense backend.
 
 HDP is active inside both prefill and decode attention when
-``cfg.hdp.enabled`` — stats (block/head sparsity per layer) are
+``cfg.hdp.enabled`` — stats (block/head/page sparsity per layer) are
 aggregated into engine metrics so serving examples/benchmarks can report
-the achieved sparsity next to throughput.
+the achieved sparsity next to throughput. ``attn_backend="pallas"``
+routes the paged HDP decode through the block-sparse Pallas kernel
+(interpret mode off-TPU).
 """
 from __future__ import annotations
 
@@ -28,6 +51,9 @@ from repro.models import registry
 from repro.serving import kv_cache
 
 I32 = jnp.int32
+
+#: Families served through the block-paged transformer KV cache.
+PAGEABLE_FAMILIES = ("dense", "moe", "vlm")
 
 
 @dataclasses.dataclass
@@ -47,11 +73,6 @@ class Result:
     decode_steps: int = 0
 
 
-def _buckets(lens: Sequence[int]) -> Sequence[int]:
-    out = sorted(set(lens))
-    return out
-
-
 class Engine:
     """Single-host serving engine (mesh-aware variants run via launch/serve).
 
@@ -63,28 +84,60 @@ class Engine:
     max_len: serving cache length (prompt + generation must fit).
     prefill_buckets: pad-to lengths for the prefill jit cache.
     collect_stats: aggregate HDP sparsity stats (small overhead).
+    cache_backend: "paged" | "dense" | "auto" (paged for transformer
+        families, dense otherwise).
+    attn_backend: "xla" | "pallas" — implementation of the paged HDP
+        decode attention (pallas = the FUM block-sparse kernel, interpret
+        mode off-TPU).
+    page_size: paged-backend page length; defaults to ``hdp.block_k``
+        (must match it while HDP is enabled).
     """
 
     def __init__(self, cfg: ModelConfig, params=None, *, rng=None,
                  max_batch: int = 4, max_len: int = 128,
                  prefill_buckets: Sequence[int] = (32, 64, 128),
-                 collect_stats: bool = False):
+                 collect_stats: bool = False,
+                 cache_backend: str = "auto", attn_backend: str = "xla",
+                 page_size: Optional[int] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "enc-dec serving uses launch/serve.py --arch whisper path")
+        if cache_backend == "auto":
+            cache_backend = ("paged" if cfg.family in PAGEABLE_FAMILIES
+                             else "dense")
+        if cache_backend not in ("paged", "dense"):
+            raise ValueError(f"unknown cache_backend {cache_backend!r}")
+        if cache_backend == "paged" and cfg.family not in PAGEABLE_FAMILIES:
+            raise ValueError(
+                f"family {cfg.family!r} has no KV pages; use dense backend")
+        if attn_backend not in ("xla", "pallas"):
+            raise ValueError(f"unknown attn_backend {attn_backend!r}")
+        if (cache_backend == "paged" and cfg.hdp is not None
+                and cfg.hdp.enabled and cfg.hdp.calib != "none"):
+            # write-time scout quantization cannot honor a data-dependent
+            # calibration scale; pin the static grid for prefill + decode
+            # alike so the engine stays self-consistent (and identical to
+            # the dense backend under the same effective config)
+            cfg = cfg.replace(hdp=cfg.hdp.replace(calib="none"))
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.buckets = sorted(b for b in prefill_buckets if b <= max_len) \
             or [max_len]
         self.collect_stats = collect_stats
+        self.paged = cache_backend == "paged"
+        self.attn_backend = attn_backend
 
         if params is None:
             rng = rng if rng is not None else jax.random.PRNGKey(0)
             params, _ = registry.init_params(cfg, rng)
         self.params = params
 
-        self.slots = kv_cache.SlotCache(cfg, max_batch, max_len)
+        if self.paged:
+            self.pages = kv_cache.PagedKVCache(cfg, max_batch, max_len,
+                                               page_size=page_size)
+        else:
+            self.slots = kv_cache.SlotCache(cfg, max_batch, max_len)
         self._free = list(range(max_batch))
         self._active: Dict[int, Dict[str, Any]] = {}  # slot -> request state
         self._results: Dict[int, Result] = {}
@@ -92,26 +145,44 @@ class Engine:
         self._last_tok = jnp.zeros((max_batch, 1), I32)
         self._pos = jnp.zeros((max_batch,), I32)
         self.metrics: Dict[str, float] = {
-            "prefill_s": 0.0, "decode_s": 0.0, "decode_steps": 0,
-            "tokens_out": 0, "block_sparsity": 0.0, "head_sparsity": 0.0,
-            "stat_samples": 0}
+            "prefill_s": 0.0, "prefill_calls": 0, "decode_s": 0.0,
+            "decode_steps": 0, "tokens_out": 0, "block_sparsity": 0.0,
+            "head_sparsity": 0.0, "page_sparsity": 0.0, "stat_samples": 0,
+            "page_samples": 0}
 
         self._prefill_jit = jax.jit(self._prefill_fn, static_argnums=(2,))
-        self._decode_jit = jax.jit(self._decode_fn)
+        self._chunk_jit = jax.jit(self._prefill_chunk_fn)
+        self._decode_jit = (jax.jit(self._decode_paged_fn) if self.paged
+                            else jax.jit(self._decode_fn))
 
     # ------------------------------------------------------------ jitted fns
     def _prefill_fn(self, params, tokens, bucket_len):
-        cache = registry.init_cache(self.cfg, 1, max_len=self.max_len)
+        cache = registry.init_cache(self.cfg, tokens.shape[0],
+                                    max_len=bucket_len)
         batch = {"tokens": tokens}
         logits, new_cache, stats = registry.apply_prefill(
             self.cfg, params, batch, cache,
             collect_stats=self.collect_stats)
         return logits, new_cache, stats
 
+    def _prefill_chunk_fn(self, params, tokens, cache, offset):
+        _, new_cache, stats = registry.apply_prefill(
+            self.cfg, params, {"tokens": tokens}, cache,
+            collect_stats=self.collect_stats, pos_offset=offset)
+        return new_cache, stats
+
     def _decode_fn(self, params, token, cache, pos):
         logits, new_cache, stats = registry.apply_decode(
             self.cfg, params, token, cache, pos[:, None],
             collect_stats=self.collect_stats)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(I32)[:, None]
+        return nxt, new_cache, stats
+
+    def _decode_paged_fn(self, params, token, cache, table, pos):
+        logits, new_cache, stats = registry.apply_decode(
+            self.cfg, params, token, cache, pos[:, None],
+            collect_stats=self.collect_stats, page_table=table,
+            attn_backend=self.attn_backend)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(I32)[:, None]
         return nxt, new_cache, stats
 
@@ -132,34 +203,121 @@ class Engine:
                 return b
         return self.max_len
 
-    def _admit(self) -> None:
-        while self._queue and self._free:
-            req = self._queue.pop(0)
-            slot = self._free.pop(0)
-            t0 = time.perf_counter()
-            plen = len(req.prompt)
-            bucket = self._bucket_for(plen)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :plen] = np.asarray(req.prompt, np.int32)
-            # right-pad with the last token (positions beyond plen are
-            # overwritten during decode before they are ever attended)
-            toks[0, plen:] = toks[0, plen - 1]
-            _, one_cache, stats = self._prefill_jit(
-                self.params, jnp.asarray(toks), bucket)
-            self.slots.insert(one_cache, slot)
-            self._record_stats(stats)
-            dt = time.perf_counter() - t0
-            self.metrics["prefill_s"] += dt
-            # uniform resume: the first decode step replays the last prompt
-            # token at its own position (its K/V rewrite is idempotent) and
-            # yields the first generated token — identical for aligned and
-            # bucket-padded prompts.
-            self._active[slot] = {"req": req, "generated": []}
-            self._results[req.uid] = Result(req.uid, plen, [], prefill_s=dt)
-            self._last_tok = self._last_tok.at[slot, 0].set(
-                int(req.prompt[-1]))
-            self._pos = self._pos.at[slot].set(plen - 1)
+    @property
+    def _can_chunk(self) -> bool:
+        # chunked prefill needs an absolute-position embedding that can be
+        # applied per chunk (rope) and a seq-indexed cache; with HDP active
+        # the chunk boundary must also sit on a q-block boundary, or the
+        # scout's per-block-row pooling shifts relative to one-shot prefill
+        if self.cfg.family not in PAGEABLE_FAMILIES \
+                or self.cfg.pos_emb != "rope":
+            return False
+        hdp = self.cfg.hdp
+        if hdp is not None and hdp.enabled \
+                and self.buckets[-1] % hdp.block_q:
+            return False  # falls back to one-shot prefill at max_len
+        return True
 
+    # ------------------------------------------------------------ admission
+    def _admit(self) -> None:
+        n = min(len(self._queue), len(self._free))
+        if n == 0:
+            return
+        take = [self._queue.pop(0) for _ in range(n)]
+        groups: Dict[int, List[Request]] = {}
+        long_reqs: List[Request] = []
+        for req in take:
+            plen = len(req.prompt)
+            if self._can_chunk and plen > self.buckets[-1]:
+                long_reqs.append(req)
+            else:
+                groups.setdefault(self._bucket_for(plen), []).append(req)
+        for bucket in sorted(groups):
+            reqs = groups[bucket]
+            for i in range(0, len(reqs), self.max_batch):
+                self._prefill_group(bucket, reqs[i:i + self.max_batch])
+        for req in long_reqs:
+            self._prefill_long(req)
+
+    def _prefill_group(self, bucket: int, reqs: List[Request]) -> None:
+        """One jitted prefill over same-bucket requests, stacked.
+
+        The batch is stacked at exact size: the jit cache stays bounded by
+        max_batch entries per bucket, and no duplicated padding row skews
+        the recorded HDP stats."""
+        nb = len(reqs)
+        toks = np.zeros((nb, bucket), np.int32)
+        for r, req in enumerate(reqs):
+            plen = len(req.prompt)
+            toks[r, :plen] = np.asarray(req.prompt, np.int32)
+            # right-pad with the last token (positions beyond plen are
+            # causally invisible to real rows and overwritten during
+            # decode before they are ever attended)
+            toks[r, plen:] = toks[r, plen - 1]
+        t0 = time.perf_counter()
+        _, one_cache, stats = self._prefill_jit(
+            self.params, jnp.asarray(toks), bucket)
+        self._record_stats(stats)
+        dt = time.perf_counter() - t0
+        self.metrics["prefill_s"] += dt
+        self.metrics["prefill_calls"] += 1
+        for r, req in enumerate(reqs):
+            self._install(req, one_cache, r, dt / nb)
+
+    def _tail_len(self, rem: int, off: int) -> int:
+        for b in self.buckets:
+            if b >= rem and off + b <= self.max_len:
+                return b
+        return rem  # exact-length fallback (one compile per distinct rem)
+
+    def _prefill_long(self, req: Request) -> None:
+        """Chunked prefill: bucket-sized chunks appended at a pos offset.
+
+        Exactly equivalent to one-shot prefill except for HDP's early head
+        gate, which applies per forward call: with tau_h > 0 each chunk
+        gates on its own theta_head rather than the whole prompt's (all
+        registered configs serve with tau_h = 0, where the paths are
+        token-identical — pinned in tests/test_paged_cache.py)."""
+        prompt = np.asarray(req.prompt, np.int32)
+        plen = len(prompt)
+        chunk = self.buckets[-1]
+        t0 = time.perf_counter()
+        cache = registry.init_cache(self.cfg, 1, max_len=self.max_len)
+        off = 0
+        while off < plen:
+            rem = plen - off
+            clen = chunk if rem >= chunk else self._tail_len(rem, off)
+            piece = np.full((1, clen), prompt[plen - 1], np.int32)
+            piece[0, :min(rem, clen)] = prompt[off:off + clen]
+            cache, stats = self._chunk_jit(
+                self.params, jnp.asarray(piece), cache,
+                jnp.asarray(off, I32))
+            self._record_stats(stats)
+            off += clen
+        dt = time.perf_counter() - t0
+        self.metrics["prefill_s"] += dt
+        self.metrics["prefill_calls"] += 1
+        self._install(req, cache, 0, dt)
+
+    def _install(self, req: Request, one_cache, row: int,
+                 prefill_s: float) -> None:
+        slot = self._free.pop(0)
+        plen = len(req.prompt)
+        if self.paged:
+            self.pages.alloc(slot, plen + req.max_new_tokens)
+            self.pages.insert(one_cache, slot, row)
+        else:
+            self.slots.insert(one_cache, slot, row)
+        # uniform resume: the first decode step replays the last prompt
+        # token at its own position (its K/V rewrite is idempotent) and
+        # yields the first generated token — identical for aligned and
+        # bucket-padded prompts.
+        self._active[slot] = {"req": req, "generated": []}
+        self._results[req.uid] = Result(req.uid, plen, [], prefill_s=prefill_s)
+        self._last_tok = self._last_tok.at[slot, 0].set(int(req.prompt[-1]))
+        self._pos = self._pos.at[slot].set(plen - 1)
+
+    # -------------------------------------------------------------- metrics
     def _record_stats(self, stats) -> None:
         if not self.collect_stats or stats is None:
             return
@@ -171,6 +329,11 @@ class Engine:
         m = self.metrics
         m["block_sparsity"] += bs
         m["head_sparsity"] += hs
+        if isinstance(stats, dict) and "page_sparsity" in stats:
+            # decode-only key: averaged over its own sample count so
+            # prefill records don't dilute it
+            m["page_sparsity"] += float(jnp.mean(stats["page_sparsity"]))
+            m["page_samples"] += 1
         m["stat_samples"] += 1
 
     def _finish(self, slot: int) -> None:
@@ -179,7 +342,14 @@ class Engine:
         res = self._results[req.uid]
         res.tokens = st["generated"]
         res.decode_steps = len(st["generated"])
-        self.slots.clear(slot)
+        if self.paged:
+            self.pages.free(slot)
+        else:
+            self.slots.clear(slot)
+        # park the slot on position 0 / token 0: an inactive paged slot's
+        # decode writes land in the scratch page via its zeroed table row
+        self._pos = self._pos.at[slot].set(0)
+        self._last_tok = self._last_tok.at[slot, 0].set(0)
         self._free.append(slot)
 
     def step(self) -> int:
@@ -190,9 +360,15 @@ class Engine:
         if not self._active:
             return 0
         t0 = time.perf_counter()
-        nxt, new_cache, stats = self._decode_jit(
-            self.params, self._last_tok, self.slots.cache, self._pos)
-        self.slots.cache = new_cache
+        if self.paged:
+            nxt, new_cache, stats = self._decode_jit(
+                self.params, self._last_tok, self.pages.cache,
+                self.pages.table(), self._pos)
+            self.pages.cache = new_cache
+        else:
+            nxt, new_cache, stats = self._decode_jit(
+                self.params, self._last_tok, self.slots.cache, self._pos)
+            self.slots.cache = new_cache
         self._record_stats(stats)
         nxt_np = np.asarray(nxt)
         self.metrics["decode_s"] += time.perf_counter() - t0
@@ -228,5 +404,17 @@ class Engine:
         if m["stat_samples"]:
             m["block_sparsity"] /= m["stat_samples"]
             m["head_sparsity"] /= m["stat_samples"]
-        m["cache_bytes"] = kv_cache.cache_bytes(self.slots.cache)
+        if m["page_samples"]:
+            m["page_sparsity"] /= m["page_samples"]
+        m["cache_backend"] = "paged" if self.paged else "dense"
+        if self.paged:
+            # resident bytes at the allocation high-water mark — what a
+            # demand-sized pool must hold (the pool itself is max-sized
+            # here for static shapes)
+            m["cache_bytes"] = self.pages.active_bytes(self.pages.peak_pages)
+            m["cache_bytes_pool"] = self.pages.pool_bytes()
+            m["pages_peak"] = self.pages.peak_pages
+            m["page_size"] = self.pages.page_size
+        else:
+            m["cache_bytes"] = kv_cache.cache_bytes(self.slots.cache)
         return m

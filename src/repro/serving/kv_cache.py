@@ -1,26 +1,27 @@
-"""KV-cache slot management for batched serving.
+"""KV-cache management for batched serving: dense slots and block pages.
 
-The decode cache for every family is a pytree whose leaves carry a
-``batch`` axis (its index per leaf comes from ``registry.cache_specs``).
-`SlotCache` provides:
+Two layouts, selected by the engine's ``cache_backend``:
 
-* ``insert(batch_cache, one_cache, slot)`` — copy a freshly-prefilled
-  single-request cache (batch=1, possibly shorter ``max_len``) into slot
-  ``slot`` of the serving batch cache (jit-compatible: slot is traced);
-* ``clear(batch_cache, slot)`` — zero a slot on request completion;
-* ``lengths`` bookkeeping lives in the engine (host side).
-
-HDP interaction: the decode path prunes KV *blocks* per query on the fly
-(`hdp_decode_attention`); the cache layout is unchanged — pruning decides
-which pages are *read*, which is the FUM memory-traffic win, not which
-are stored.
+* `SlotCache` — the dense per-slot contiguous layout. The decode cache
+  for every family is a pytree whose leaves carry a ``batch`` axis (its
+  index per leaf comes from ``registry.cache_specs``); ``insert`` copies
+  one row of a freshly-prefilled request cache (possibly shorter
+  ``max_len`` — bucketed/batched prefill) into a slot, ``clear`` zeroes a
+  slot on completion. Works for every family, including recurrent state.
+* `PagedKVCache` — the block-paged transformer layout: one shared page
+  pool + per-slot page tables, page size = HDP's ``block_k`` so cache
+  pages coincide with the integer scout's pruning blocks. The decode
+  path gathers only scout-surviving pages (`hdp_paged_decode_attention`)
+  — pruned pages are never read, which is the FUM memory-traffic win —
+  and pages are allocated per request, which is the resident-bytes win.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import registry
 
@@ -50,19 +51,21 @@ class SlotCache:
         self.axes = _batch_axes(cfg)
 
     # ------------------------------------------------------------- insert
-    def insert(self, one_cache, slot) -> None:
-        """Copy a batch=1 request cache into `slot` (in place on host)."""
-        self.cache = insert_slot(self.cache, one_cache, slot, self.axes)
+    def insert(self, one_cache, slot, row: int = 0) -> None:
+        """Copy row `row` of a request cache into `slot` (in place on host)."""
+        self.cache = insert_slot(self.cache, one_cache, slot, self.axes,
+                                 row=row)
 
     def clear(self, slot) -> None:
         self.cache = clear_slot(self.cache, slot, self.axes)
 
 
-def _dus_axis(big, small, slot, axis: int):
-    """dynamic_update_slice of `small` into `big` at index `slot` of `axis`,
-    zero-padding the sequence dims when the prefill cache is shorter."""
+def _dus_axis(big, small, slot, axis: int, row: int = 0):
+    """dynamic_update_slice of row `row` of `small` into `big` at index
+    `slot` of `axis`, zero-padding the sequence dims when the prefill cache
+    is shorter (bucketed/batched prefill)."""
     if small.shape[axis] != 1:
-        small = jnp.take(small, jnp.arange(1), axis=axis)  # defensive
+        small = jax.lax.dynamic_slice_in_dim(small, row, 1, axis)
     # pad every non-batch dim that is shorter (bucketed prefill caches)
     pads = []
     for d, (bs, ss) in enumerate(zip(big.shape, small.shape)):
@@ -80,11 +83,11 @@ def _dus_axis(big, small, slot, axis: int):
     return jax.lax.dynamic_update_slice(big, small.astype(big.dtype), start)
 
 
-def insert_slot(batch_cache, one_cache, slot, axes) -> Any:
+def insert_slot(batch_cache, one_cache, slot, axes, row: int = 0) -> Any:
     def one(big, small, ax):
         if ax is None:  # no batch axis (shared leaf) — keep serving copy
             return big
-        return _dus_axis(big, small, slot, ax)
+        return _dus_axis(big, small, slot, ax, row=row)
 
     return jax.tree.map(one, batch_cache, one_cache, axes)
 
@@ -102,6 +105,142 @@ def clear_slot(batch_cache, slot, axes) -> Any:
 
 def cache_bytes(cache) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+# --------------------------------------------------------------------------
+# Block-paged KV cache (transformer families)
+# --------------------------------------------------------------------------
+class PagedKVCache:
+    """Page pool + per-slot page tables, aligned to HDP's ``block_k``.
+
+    Layout: ``k_pages``/``v_pages`` are [L, P, page_size, N, hd] pools
+    shared by every slot; a host-side page table maps slot -> page ids.
+    With HDP enabled an int8 ``k_scout`` pool rides along — the
+    write-time-quantized integer copy of K that the decode scout always
+    streams, so the full-precision K/V of pruned pages is never gathered
+    (the Fetch-Upon-Mask contract; see
+    ``attention.hdp_paged_decode_attention``).
+
+    Page 0 is a reserved *scratch* page: pruned pages' gather indices and
+    inactive slots' decode writes are redirected there, so its contents
+    are arbitrary-but-finite and, by construction, always masked.
+
+    Pages are allocated per request for ``prompt + max_new`` tokens (not
+    ``max_len``), which is where the serving-memory win over the dense
+    per-slot layout comes from; ``active_bytes`` tracks it.
+    """
+
+    def __init__(self, cfg, batch: int, max_len: int,
+                 page_size: Optional[int] = None, num_pages: Optional[int] = None):
+        hdp = cfg.hdp
+        self.scout = hdp is not None and hdp.enabled
+        ps = page_size or (hdp.block_k if self.scout else 16)
+        if self.scout and ps != hdp.block_k:
+            raise ValueError(
+                f"page_size {ps} must equal hdp.block_k {hdp.block_k} so "
+                "pages coincide with the scout's pruning blocks")
+        if self.scout and hdp.int_bits > 6:
+            raise ValueError(
+                f"int_bits={hdp.int_bits} exceeds the int8 scout copy's "
+                "range (integer parts reach +/-2^int_bits; need <= 6)")
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.page_size = ps
+        self.pages_per_slot = -(-max_len // ps)
+        self.num_pages = (1 + batch * self.pages_per_slot
+                          if num_pages is None else num_pages)
+        L, N, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        dt = jnp.dtype(cfg.dtype)
+        shape = (L, self.num_pages, ps, N, hd)
+        self.cache: Dict[str, jnp.ndarray] = {
+            "k_pages": jnp.zeros(shape, dt),
+            "v_pages": jnp.zeros(shape, dt),
+        }
+        if self.scout:
+            self.cache["k_scout"] = jnp.zeros(shape, jnp.int8)
+        self._free: List[int] = list(range(1, self.num_pages))
+        self._slot_pages: Dict[int, List[int]] = {}
+        self._table = np.zeros((batch, self.pages_per_slot), np.int32)
+        self.peak_pages = 0
+
+    # ---------------------------------------------------------- host state
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(p) for p in self._slot_pages.values())
+
+    def table(self) -> jnp.ndarray:
+        return jnp.asarray(self._table)
+
+    def alloc(self, slot: int, n_tokens: int) -> List[int]:
+        """Reserve pages for `n_tokens` cache positions of `slot`."""
+        if slot in self._slot_pages:
+            self.free(slot)
+        need = max(1, -(-n_tokens // self.page_size))
+        if need > self.pages_per_slot:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens exceed max_len {self.max_len}")
+        if need > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: need {need}, free {len(self._free)}")
+        pages = [self._free.pop(0) for _ in range(need)]
+        self._slot_pages[slot] = pages
+        self._table[slot, :] = 0
+        self._table[slot, :need] = pages
+        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+        return pages
+
+    def free(self, slot: int) -> None:
+        # returned pages go to the FRONT: the next allocation reuses the
+        # hottest pages, which also makes reuse deterministic to test
+        self._free[:0] = self._slot_pages.pop(slot, [])
+        self._table[slot, :] = 0
+
+    # -------------------------------------------------------------- insert
+    def insert(self, one_cache, slot: int, row: int = 0) -> None:
+        """Scatter row `row` of a prefill cache into `slot`'s pages.
+
+        Prefill positions past the slot's allocation are bucket padding —
+        causally dead and overwritten by decode before they are ever
+        visible — so they are simply dropped."""
+        pages = self._slot_pages[slot]
+        ps = self.page_size
+        k = one_cache["k"][:, row]                     # [L, S, N, hd]
+        v = one_cache["v"][:, row]
+        L, S, N, hd = k.shape
+        npg = min(-(-S // ps), len(pages))
+        pad = npg * ps - min(S, npg * ps)
+
+        def to_pages(x):
+            x = x[:, :npg * ps]
+            if pad:
+                x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return x.reshape(L, npg, ps, N, hd)
+
+        idx = jnp.asarray(pages[:npg], jnp.int32)
+        kp, vp = to_pages(k), to_pages(v)
+        self.cache["k_pages"] = self.cache["k_pages"].at[:, idx].set(
+            kp.astype(self.cache["k_pages"].dtype))
+        self.cache["v_pages"] = self.cache["v_pages"].at[:, idx].set(
+            vp.astype(self.cache["v_pages"].dtype))
+        if self.scout:
+            from repro.models.attention import scout_int8
+            self.cache["k_scout"] = self.cache["k_scout"].at[:, idx].set(
+                scout_int8(kp, self.cfg.hdp))
+
+    # ------------------------------------------------------------ metrics
+    def _page_bytes(self) -> int:
+        per = sum(v.dtype.itemsize * int(np.prod(v.shape[2:]))
+                  for v in self.cache.values()) * self.cfg.n_layers
+        return per
+
+    def active_bytes(self, pages: Optional[int] = None) -> int:
+        """Bytes resident for `pages` allocated pages (default: current)."""
+        n = self.pages_in_use if pages is None else pages
+        return n * self._page_bytes()
+
+    def pool_bytes(self) -> int:
+        return cache_bytes(self.cache)
 
 
 def kv_read_bytes_per_step(cfg, seq_len: int, batch: int,

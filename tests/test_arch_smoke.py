@@ -9,7 +9,14 @@ import pytest
 from repro.configs import get_config, list_configs, reduced
 from repro.models import registry
 
-ARCHS = list(list_configs())
+# the hybrid/enc-dec archs and the largest dense/MoE towers dominate suite
+# wall time (SSM scan + big compiles); their smoke coverage rides in the
+# slow tier, PR-gating keeps one representative per family
+_HEAVY = ("zamba2-7b", "whisper-large-v3", "chameleon-34b",
+          "granite-8b", "llama4-scout-17b-a16e")
+ARCH_NAMES = list(list_configs())
+ARCHS = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+         for a in ARCH_NAMES]
 
 
 def _smoke_batch(cfg, rng, B=2, S=32):
@@ -48,6 +55,7 @@ def test_forward_shapes_and_finite(arch, built):
     assert bool(jnp.isfinite(extras["aux_loss"]))
 
 
+@pytest.mark.slow  # training path: covered by the full tier on main pushes
 @pytest.mark.parametrize("arch", ARCHS)
 def test_one_train_step_decreases_loss_signal(arch, built):
     """One SGD step on the smoke batch must produce finite grads that
@@ -119,7 +127,7 @@ def test_prefill_then_decode_matches_full_forward(arch, built):
 
 
 def test_param_counts_match_analytic():
-    for arch in ARCHS:
+    for arch in ARCH_NAMES:
         cfg = reduced(get_config(arch))
         params, _ = registry.init_params(cfg, jax.random.PRNGKey(0))
         real = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

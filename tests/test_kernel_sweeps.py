@@ -10,7 +10,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property sweeps need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+pytestmark = pytest.mark.slow  # randomized interpret-mode sweeps
 
 from repro.core.config import HDPConfig
 from repro.core.hdp import hdp_attention

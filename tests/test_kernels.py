@@ -21,7 +21,9 @@ def rnd(*shape, seed=0, scale=2.0, dtype=jnp.float32):
 # ------------------------------------------------------------------ flash
 class TestFlashKernel:
     @pytest.mark.parametrize("shape", [
-        (1, 2, 128, 64), (2, 3, 256, 128), (1, 1, 160, 64),  # ragged S
+        (1, 2, 128, 64),
+        pytest.param((2, 3, 256, 128), marks=pytest.mark.slow),
+        pytest.param((1, 1, 160, 64), marks=pytest.mark.slow),  # ragged S
     ])
     @pytest.mark.parametrize("causal", [True, False])
     def test_matches_ref(self, shape, causal):
@@ -45,7 +47,10 @@ class TestFlashKernel:
 
 # ------------------------------------------------------------------ scout
 class TestScoutKernel:
-    @pytest.mark.parametrize("shape", [(1, 2, 128, 64), (2, 2, 256, 32)])
+    @pytest.mark.parametrize("shape", [
+        (1, 2, 128, 64),
+        pytest.param((2, 2, 256, 32), marks=pytest.mark.slow),
+    ])
     @pytest.mark.parametrize("rho", [0.5, -0.5])
     @pytest.mark.parametrize("causal", [True, False])
     def test_matches_ref(self, shape, rho, causal):

@@ -27,7 +27,11 @@ def _dense(cfg):
         hdp=cfg.hdp.replace(enabled=False))
 
 
-@pytest.mark.parametrize("arch", ["qwen2-1.5b", "rwkv6-3b", "zamba2-7b"])
+@pytest.mark.parametrize("arch", [
+    "qwen2-1.5b",
+    pytest.param("rwkv6-3b", marks=pytest.mark.slow),
+    pytest.param("zamba2-7b", marks=pytest.mark.slow),
+])
 def test_batched_equals_solo(arch):
     cfg = _dense(reduced(get_config(arch)))
     import jax
