@@ -26,7 +26,7 @@ import time
 import traceback
 
 
-def bench_serving(quick: bool = False):
+def bench_serving(quick: bool = False, backend: str = "auto"):
     from repro.launch import serve
 
     rows = []
@@ -34,8 +34,11 @@ def bench_serving(quick: bool = False):
         for no_hdp in (False, True):
             args = serve.build_parser().parse_args(
                 ["--arch", arch, "--requests", "4" if quick else "8",
-                 "--max-new", "4" if quick else "6"]
+                 "--max-new", "4" if quick else "6", "--backend", backend]
                 + (["--no-hdp"] if no_hdp else []))
+            # every row records the RESOLVED backend per phase
+            # (attn_prefill / attn_decode), so A/B rows stay attributable
+            # when auto-selection or fallback changes
             out = serve.run(args)
             rows.append({"arch": arch, "hdp": not no_hdp, **out})
     print("# serving (reduced configs, continuous batching)")
@@ -46,7 +49,7 @@ def bench_serving(quick: bool = False):
     return rows
 
 
-def bench_serving_paged(quick: bool = False):
+def bench_serving_paged(quick: bool = False, backend: str = "auto"):
     """Paged vs dense cache backend A/B: decode tok/s + resident cache bytes.
 
     With HDP enabled the paged backend stores the int8 scout copy but
@@ -60,13 +63,15 @@ def bench_serving_paged(quick: bool = False):
 
     rows = []
     for arch in ("qwen2-1.5b", "granite-8b"):
-        for backend in ("paged", "dense"):
+        for layout in ("paged", "dense"):
             args = serve.build_parser().parse_args(
                 ["--arch", arch, "--requests", "4" if quick else "8",
-                 "--max-new", "4" if quick else "6",
-                 "--cache-backend", backend, "--calib", "none"])
+                 "--max-new", "4" if quick else "6", "--backend", backend,
+                 "--layout", layout, "--calib", "none"])
             out = serve.run(args)
-            rows.append({"arch": arch, "backend": backend, **out})
+            row = {"arch": arch, **out}
+            row["backend"] = layout  # the A/B independent variable
+            rows.append(row)
     print("# serving paged-vs-dense (reduced configs, HDP on, calib=none)")
     hdr = [h for h in rows[0] if h != "requests"]
     print(",".join(str(h) for h in hdr))
@@ -106,12 +111,20 @@ def _register():
     })
 
 
+#: benches that accept an attention-backend selection (--backend)
+_BACKEND_AWARE = ("serving", "serving_paged")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="smaller sweeps / fewer eval batches")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--backend", default="auto",
+                    help="attention backend name/tag for the serving "
+                         "benches; the resolved (post-fallback) backend is "
+                         "recorded per output row")
     args = ap.parse_args(argv)
     _register()
     names = list(BENCHES) if not args.only else args.only.split(",")
@@ -123,8 +136,11 @@ def main(argv=None) -> int:
             continue
         t0 = time.time()
         print(f"\n===== {name} =====", flush=True)
+        kw = {"quick": args.quick}
+        if name in _BACKEND_AWARE:
+            kw["backend"] = args.backend
         try:
-            BENCHES[name](quick=args.quick)
+            BENCHES[name](**kw)
             print(f"===== {name} done in {time.time()-t0:.0f}s =====",
                   flush=True)
         except Exception:  # noqa: BLE001 — keep the harness going

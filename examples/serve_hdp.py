@@ -13,6 +13,7 @@ import argparse
 import numpy as np
 
 from benchmarks import common
+from repro.attention import AttnSpec
 from repro.serving import Engine, Request
 from repro.serving.kv_cache import kv_read_bytes_per_step
 
@@ -37,11 +38,11 @@ prompts = [rng.integers(1, cfg.vocab_size, size=int(rng.integers(6, 40)))
            .tolist() for _ in range(args.requests)]
 
 
-def serve(with_hdp: bool, cache_backend: str = "paged"):
+def serve(with_hdp: bool, layout: str = "paged"):
     c = cfg.replace(hdp=hdp) if with_hdp else cfg
     eng = Engine(c, params=params, max_batch=4, max_len=96,
                  prefill_buckets=(16, 32, 64), collect_stats=with_hdp,
-                 cache_backend=cache_backend)
+                 attn=AttnSpec(layout=layout))
     for uid, p in enumerate(prompts):
         eng.submit(Request(uid, p, max_new_tokens=args.max_new))
     res = eng.run()

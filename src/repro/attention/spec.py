@@ -1,0 +1,146 @@
+"""Attention call descriptors and backend-selection specs.
+
+``AttnCall`` is the frozen, hashable descriptor of ONE attention
+invocation — everything a backend needs to decide *whether* it can serve
+the call (``Backend.supports``) and *how* (mask semantics, HDP pipeline
+on/off, cache layout). Runtime tensors (position arrays, page tables,
+page pools) are deliberately NOT part of the call: they are passed
+alongside to :func:`repro.attention.attention` so the descriptor stays
+static under ``jax.jit`` tracing. The paper-level knobs named in the
+design (q_offset / kv_len) are generalized here to the ``q_pos`` /
+``k_pos`` position arrays every implementation already masks with.
+
+``AttnSpec`` is the user-facing selection policy threaded through the
+model / serving layers instead of the former stringly-typed
+``attn_backend=`` / ``cache_backend=`` kwargs: an exact backend name, a
+family tag ("xla" | "pallas" | "reference"), or "auto", with optional
+per-mode overrides plus the serving cache layout. The old string kwargs
+keep working for one release via :func:`spec_from_legacy`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+from repro.core.config import HDPConfig
+
+MODES = ("prefill", "decode")
+LAYOUTS = ("dense", "paged")
+CACHE_LAYOUTS = ("auto", "dense", "paged")
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCall:
+    """Static descriptor of one attention invocation.
+
+    Attributes:
+      mode: "prefill" (train and prompt runs) | "decode" (query vs cache).
+      layout: "dense" contiguous K/V tensors | "paged" block-paged pools
+        (cache dict with ``k_pages``/``v_pages``[/``k_scout``] + table).
+      causal: compose a causal mask from the q/k position arrays.
+      window: sliding-window width (0 = unbounded).
+      hdp: the HDP pipeline config, or None for exact dense attention
+        (``enabled=False`` configs are normalized to None at build time).
+      per_slot: positions carry a batch dim (continuous-batching decode).
+      self_aligned: q spans the whole KV extent from position 0 with
+        shared positions (no cache, no cross) — the shape contract the
+        monolithic Pallas kernels require.
+      trainable: gradients must flow (train step); excludes backends
+        without a VJP (the Pallas kernels).
+      chunk: KV chunk length hint for flash-style scanning (0 = whole
+        extent); a perf knob, never a semantic one.
+      needs_stats: backend should return populated AttnStats.
+    """
+
+    mode: str
+    layout: str = "dense"
+    causal: bool = True
+    window: int = 0
+    hdp: Optional[HDPConfig] = None
+    per_slot: bool = False
+    self_aligned: bool = False
+    trainable: bool = False
+    chunk: int = 0
+    needs_stats: bool = False
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.layout not in LAYOUTS:
+            raise ValueError(
+                f"layout must be one of {LAYOUTS}, got {self.layout!r}")
+        if self.layout == "paged" and self.mode != "decode":
+            raise ValueError("paged layout is a decode-time serving format")
+        if self.hdp is not None and not self.hdp.enabled:
+            object.__setattr__(self, "hdp", None)
+
+    def replace(self, **kw) -> "AttnCall":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    """Backend-selection policy threaded through models / serving.
+
+    Attributes:
+      backend: exact backend name (``"xla_hdp"``), family tag (``"xla"``,
+        ``"pallas"``, ``"reference"``), or ``"auto"`` (highest-ranked
+        supporting backend; Pallas ranks above XLA only on TPU).
+      prefill / decode: optional per-mode overrides of ``backend``.
+      layout: serving cache layout — "auto" picks paged for transformer
+        families, dense otherwise (Engine-level; ignored by dispatch).
+      allow_fallback: when the requested backend does not support a call,
+        fall down the auto chain instead of raising.
+    """
+
+    backend: str = "auto"
+    prefill: Optional[str] = None
+    decode: Optional[str] = None
+    layout: str = "auto"
+    allow_fallback: bool = True
+
+    def __post_init__(self):
+        if self.layout not in CACHE_LAYOUTS:
+            raise ValueError(
+                f"layout must be one of {CACHE_LAYOUTS}, got {self.layout!r}")
+
+    def requested_for(self, mode: str) -> str:
+        over = self.prefill if mode == "prefill" else self.decode
+        return over if over is not None else self.backend
+
+    def replace(self, **kw) -> "AttnSpec":
+        return dataclasses.replace(self, **kw)
+
+
+_LEGACY_ATTN = {"xla": "xla", "pallas": "pallas", "auto": "auto"}
+
+
+def spec_from_legacy(attn_backend: Optional[str] = None,
+                     cache_backend: Optional[str] = None,
+                     base: Optional[AttnSpec] = None,
+                     stacklevel: int = 3) -> AttnSpec:
+    """Map the deprecated string kwargs onto an :class:`AttnSpec`.
+
+    Emits ONE DeprecationWarning covering every legacy kwarg passed.
+    Removal is scheduled for the release after the registry lands.
+    """
+    spec = base if base is not None else AttnSpec()
+    legacy = []
+    if attn_backend is not None:
+        if attn_backend not in _LEGACY_ATTN:
+            raise ValueError(f"unknown attn_backend {attn_backend!r}")
+        legacy.append(f"attn_backend={attn_backend!r}")
+        spec = spec.replace(backend=_LEGACY_ATTN[attn_backend])
+    if cache_backend is not None:
+        if cache_backend not in CACHE_LAYOUTS:
+            raise ValueError(f"unknown cache_backend {cache_backend!r}")
+        legacy.append(f"cache_backend={cache_backend!r}")
+        spec = spec.replace(layout=cache_backend)
+    if legacy:
+        warnings.warn(
+            f"{', '.join(legacy)} string kwargs are deprecated; pass "
+            f"attn=AttnSpec(backend={spec.backend!r}, layout={spec.layout!r}) "
+            "instead (repro.attention.AttnSpec)",
+            DeprecationWarning, stacklevel=stacklevel)
+    return spec

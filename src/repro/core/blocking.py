@@ -30,6 +30,27 @@ def block_sum(scores: jnp.ndarray, block_q: int, block_k: int) -> jnp.ndarray:
     return r.sum(axis=(-3, -1))
 
 
+def pooled_block_theta(
+    scores: jnp.ndarray, valid: jnp.ndarray, block_k: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pool a [..., q, Sk] score slab into ONE row of Sk/block_k blocks.
+
+    The whole q extent is treated as a single block row (decode-shaped
+    pooling: with a block-paged KV cache these blocks ARE the cache
+    pages). ``valid`` is a positionally-broadcastable bool mask over
+    [..., q, Sk]. Returns (theta [..., nk] f32 abs-sum importances,
+    bvalid [..., nk] blocks with any valid position).
+    """
+    s = jnp.where(valid, scores, 0.0)
+    *lead, q, sk = s.shape
+    theta = jnp.abs(s.reshape(*lead, q, sk // block_k, block_k)).sum(
+        axis=(-3, -1))
+    *vlead, vq, _ = valid.shape
+    bvalid = valid.reshape(*vlead, vq, sk // block_k, block_k).any(
+        axis=(-3, -1))
+    return theta, bvalid
+
+
 def row_threshold(
     theta: jnp.ndarray, rho_b, valid: Optional[jnp.ndarray] = None
 ) -> jnp.ndarray:

@@ -51,12 +51,7 @@ def decode_scout(int_scores: jnp.ndarray, valid: jnp.ndarray, cfg: HDPConfig):
       theta_head [...]         — head importances (normalized per cfg)
       head_kept [...] bool     — early head gate
     """
-    bk = cfg.block_k
-    s = jnp.where(valid, int_scores, 0.0)
-    *lead, q, sk = s.shape
-    theta = jnp.abs(s.reshape(*lead, q, sk // bk, bk)).sum(axis=(-3, -1))
-    *vlead, vq, _ = valid.shape
-    bvalid = valid.reshape(*vlead, vq, sk // bk, bk).any(axis=(-3, -1))
+    theta, bvalid = blocking.pooled_block_theta(int_scores, valid, cfg.block_k)
     if cfg.block_pruning:
         thr = blocking.row_threshold(theta, cfg.rho_b, bvalid)
         keep = blocking.block_keep_mask(theta, thr, bvalid)
@@ -108,8 +103,7 @@ def _scout_and_mask(iq, ik, cfg: HDPConfig, lq, lk, q_offset, kv_len=None):
     if cfg.causal:
         elem_valid = blocking.causal_element_mask(iq.shape[-2], ik.shape[-2], q_offset)
     if kv_len is not None:
-        kmask = jnp.arange(ik.shape[-2]) < kv_len
-        kmask = kmask[None, :] if elem_valid is None else kmask[None, :]
+        kmask = (jnp.arange(ik.shape[-2]) < kv_len)[None, :]
         elem_valid = kmask if elem_valid is None else jnp.logical_and(elem_valid, kmask)
     pad_q = iq.shape[-2] - lq
     pad_k = ik.shape[-2] - lk

@@ -17,6 +17,7 @@ import sys
 
 import numpy as np
 
+from repro.attention import AttnSpec, spec_from_legacy
 from repro.configs import get_config
 from repro.configs.base import reduced
 from repro.serving import Engine, Request
@@ -37,14 +38,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--rho-b", type=float, default=None)
     ap.add_argument("--tau-h", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--cache-backend", default="auto",
+    ap.add_argument("--backend", default="auto",
+                    help="attention backend name or family tag from the "
+                         "repro.attention registry (auto | reference | xla | "
+                         "pallas | an exact name like paged_hdp_decode)")
+    ap.add_argument("--layout", default="auto",
                     choices=["auto", "paged", "dense"],
-                    help="paged = block-paged KV cache (FUM page gather); "
-                         "dense = per-slot contiguous reference")
-    ap.add_argument("--attn-backend", default="xla",
+                    help="serving cache layout: paged = block-paged KV cache "
+                         "(FUM page gather); dense = per-slot contiguous")
+    ap.add_argument("--cache-backend", default=None,
+                    choices=["auto", "paged", "dense"],
+                    help="DEPRECATED: use --layout")
+    ap.add_argument("--attn-backend", default=None,
                     choices=["xla", "pallas"],
-                    help="paged HDP decode implementation (pallas runs the "
-                         "block-sparse kernel, interpret mode off-TPU)")
+                    help="DEPRECATED: use --backend")
     ap.add_argument("--calib", default=None,
                     help="override hdp calibration (the paged scout stores "
                          "a write-time int8 copy, i.e. calib-free)")
@@ -67,11 +74,14 @@ def run(args) -> dict:
             hdp = dataclasses.replace(hdp, calib=args.calib)
         cfg = cfg.replace(hdp=hdp)
 
+    spec = AttnSpec(backend=args.backend, layout=args.layout)
+    if args.attn_backend is not None or args.cache_backend is not None:
+        # one-release deprecation shim for the old string flags
+        spec = spec_from_legacy(args.attn_backend, args.cache_backend,
+                                base=spec)
     eng = Engine(cfg, max_batch=args.max_batch, max_len=args.max_len,
                  prefill_buckets=(16, 32, 64),
-                 collect_stats=not args.no_hdp,
-                 cache_backend=args.cache_backend,
-                 attn_backend=args.attn_backend)
+                 collect_stats=not args.no_hdp, attn=spec)
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):
         plen = int(rng.integers(4, min(48, args.max_len - args.max_new)))
@@ -85,6 +95,10 @@ def run(args) -> dict:
         "requests": args.requests,
         "completed": done,
         "backend": s["cache_backend"],
+        # resolved (post-fallback) attention backends, one per phase — the
+        # attributable ground truth for benchmark A/B rows
+        "attn_prefill": s["attn_backend_prefill"],
+        "attn_decode": s["attn_backend_decode"],
         "decode_tok_s": round(s.get("decode_tok_s", 0.0), 2),
         "prefill_s_total": round(s["prefill_s"], 3),
         "prefill_calls": s["prefill_calls"],

@@ -21,6 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.attention import AttnCall, AttnSpec, attention
 from repro.core import blocking
 from repro.core.config import HDPConfig
 from repro.core.hdp import calibrated_split, decode_scout
@@ -177,21 +178,6 @@ def decode_attention(q, k, v, *, q_pos, k_pos, window: int = 0,
 
 
 # ----------------------------------------------------------------- HDP path
-def _block_theta(int_scores, valid, bk):
-    """abs-sum block pooling of a [B,N,G,bq,Sk] score slab -> [B,N,G,nk].
-
-    The slab's whole q extent is one block row; `valid` is a positionally
-    broadcastable [..., bq, Sk] validity mask (2-D for shared positions,
-    [B,1,1,bq,Sk] for per-slot decode). Returns (theta, bvalid[..., nk])."""
-    s = jnp.where(valid, int_scores, 0.0)
-    B, N, G, q, Sk = s.shape
-    s = s.reshape(B, N, G, q, Sk // bk, bk)
-    theta = jnp.abs(s).sum(axis=(3, 5))
-    *lead, vq, _ = valid.shape
-    bvalid = valid.reshape(*lead, vq, Sk // bk, bk).any(axis=(-3, -1))
-    return theta, bvalid
-
-
 def hdp_prefill_attention(q, k, v, *, q_pos, k_pos, hdp: HDPConfig,
                           window: int = 0, return_stats: bool = False):
     """Two-pass blockwise HDP (Alg. 2 adapted to TPU-sized tiles).
@@ -227,7 +213,7 @@ def hdp_prefill_attention(q, k, v, *, q_pos, k_pos, hdp: HDPConfig,
         s_int = jnp.einsum("bngqh,bsnh->bngqs", iq_i, ik,
                            preferred_element_type=F32)
         valid = _mask_bias(qp_i, kp, hdp.causal, window)
-        theta, bvalid = _block_theta(s_int, valid, bk)
+        theta, bvalid = blocking.pooled_block_theta(s_int, valid, bk)
         if hdp.block_pruning:
             thr = blocking.row_threshold(theta, hdp.rho_b, bvalid)
             keep = blocking.block_keep_mask(theta, thr, bvalid)
@@ -373,7 +359,7 @@ def scout_int8(k, hdp: HDPConfig):
 def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
                                q_pos, k_pos, hdp: HDPConfig, window: int = 0,
                                return_stats: bool = False,
-                               attn_backend: str = "xla"):
+                               pallas: bool = False):
     """HDP decode over a block-paged KV cache — the FUM dataflow in XLA.
 
     q [B,N,G,Sq,hd]; k/v_pool [P,ps,N,hd] page pools (page 0 is the
@@ -389,9 +375,11 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
     Stage 3 runs the approximate attention QK^T - FQ FK^T on the gathered
     pages with the keep mask excluded from the softmax.
 
-    attn_backend="pallas" routes stage 3 through the
+    ``pallas=True`` routes stage 3 through the
     ``hdp_block_sparse_attention`` Pallas kernel (interpret mode off-TPU);
-    "xla" is the pure-jnp fallback with identical semantics.
+    the default is the pure-jnp stage with identical semantics. Backend
+    selection lives in ``repro.attention`` (``paged_hdp_decode`` /
+    ``pallas_hdp_block``); this function is the shared stage pipeline.
     """
     B, N, G, Sq, hd = q.shape
     P, ps, _, _ = k_pool.shape
@@ -417,12 +405,12 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
     v = v_pool[gather_idx].reshape(B, Sk, N, hd)
 
     # ---- stage 3: approximate attention on surviving pages ----
-    if attn_backend == "pallas" and window:
+    if pallas and window:
         # the kernel's per-row validity is an upper bound (cols < kv_len)
         # and cannot express the sliding-window lower bound; fall back to
         # the jnp path rather than silently attending out-of-window keys
-        attn_backend = "xla"
-    if attn_backend == "pallas":
+        pallas = False
+    if pallas:
         from repro.kernels.hdp_block_attn import hdp_block_sparse_attention
         from repro.kernels.ops import _auto_interpret
         from repro.kernels.ref import keep_mask_to_indices
@@ -464,16 +452,49 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
 
 
 # --------------------------------------------------------------- full layer
+def build_attn_call(cfg, *, mode: str, paged: bool = False,
+                    per_slot: bool = False, self_aligned: bool = False,
+                    cross: bool = False, causal: bool = True,
+                    collect_stats: bool = False) -> AttnCall:
+    """Construct the AttnCall `attn_apply` dispatches on.
+
+    One place derives the static call descriptor from the model config and
+    invocation shape — `attn_apply` uses it for dispatch, and the serving
+    engine uses the SAME function to report the resolved backend per
+    phase, so the report cannot drift from the dispatch.
+    """
+    hdp = cfg.hdp
+    use_hdp = (hdp is not None and hdp.enabled
+               and (mode != "train" or hdp.apply_in_training))
+    eff_causal = causal and not cross
+    window = 0 if cross else cfg.sliding_window
+    return AttnCall(
+        mode="decode" if mode == "decode" else "prefill",
+        layout="paged" if paged else "dense",
+        causal=eff_causal,
+        window=window,
+        hdp=hdp.replace(causal=eff_causal) if use_hdp else None,
+        per_slot=per_slot,
+        self_aligned=self_aligned,
+        trainable=mode == "train",
+        chunk=cfg.attn_chunk,
+        needs_stats=collect_stats,
+    )
+
+
 def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
                enc_out=None, causal: bool = True, static_cache: bool = False,
                collect_stats: bool = False, page_table=None,
-               attn_backend: str = "xla") -> Tuple[Any, Any, Any]:
+               attn: Optional[AttnSpec] = None) -> Tuple[Any, Any, Any]:
     """Full MHA layer: project, rope, (HDP-)attend, output-project.
 
     mode: train | prefill | decode. cache: {"k","v"} [B,Smax,N,hd] (+ pos
     handled by caller passing `positions`). enc_out: cross-attention keys
     source (whisper decoder prefill); static_cache: attend to the cache
-    as-is without writing (whisper cross-attn at decode).
+    as-is without writing (whisper cross-attn at decode). attn: backend
+    selection spec (None -> the default spec, which honors the
+    REPRO_ATTN_BACKEND env var); the attention maths itself is dispatched
+    through ``repro.attention.attention`` on an AttnCall descriptor.
     Returns (y, new_cache, stats|None).
 
     NOTE (perf log B3): writing K/V into the *stacked* [L,B,S,N,hd] cache
@@ -575,53 +596,15 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
     # per-slot positions carry a batch dim; align it with [B,N,G,Sq,Sk]
     q_pos = positions[:, None, None, :] if positions.ndim == 2 else positions
 
-    hdp = cfg.hdp
-    use_hdp = (hdp is not None and hdp.enabled
-               and (mode != "train" or hdp.apply_in_training))
-    stats = None
     is_cross = enc_out is not None or static_cache
-    if cache is not None and "k_pages" in cache:
-        if use_hdp:
-            o, stats = hdp_paged_decode_attention(
-                qg, new_cache["k_pages"], new_cache["v_pages"],
-                new_cache["k_scout"], page_table, q_pos=q_pos, k_pos=k_pos,
-                hdp=hdp.replace(causal=causal), window=cfg.sliding_window,
-                return_stats=collect_stats, attn_backend=attn_backend)
-        else:
-            B_, nP_ = page_table.shape
-            ps_ = new_cache["k_pages"].shape[1]
-            k_full = new_cache["k_pages"][page_table].reshape(
-                B_, nP_ * ps_, N, hd)
-            v_full = new_cache["v_pages"][page_table].reshape(
-                B_, nP_ * ps_, N, hd)
-            o = decode_attention(qg, k_full, v_full, q_pos=q_pos,
-                                 k_pos=k_pos, window=cfg.sliding_window,
-                                 causal=True)
-    elif use_hdp:
-        hdp = hdp.replace(causal=causal and not is_cross)
-        if mode == "decode":
-            o, stats = hdp_decode_attention(
-                qg, k_full, v_full, q_pos=q_pos, k_pos=k_pos, hdp=hdp,
-                window=cfg.sliding_window, return_stats=collect_stats)
-        else:
-            o, stats = hdp_prefill_attention(
-                qg, k_full, v_full, q_pos=q_pos, k_pos=k_pos, hdp=hdp,
-                window=cfg.sliding_window, return_stats=collect_stats)
-    elif mode == "decode":
-        o = decode_attention(qg, k_full, v_full, q_pos=q_pos, k_pos=k_pos,
-                             window=0 if is_cross else cfg.sliding_window,
-                             causal=not is_cross)
-    elif (cfg.sliding_window and not is_cross and S > cfg.sliding_window
-          and k_full.shape[1] == S):
-        # block-local path needs aligned q/k; chunked serving prefill
-        # (q = one chunk, k = whole cache) windows via chunked_attention
-        o = local_attention(qg, k_full, v_full, q_pos=q_pos, k_pos=k_pos,
-                            window=cfg.sliding_window, causal=causal)
-    else:
-        o = chunked_attention(qg, k_full, v_full, q_pos=q_pos, k_pos=k_pos,
-                              chunk=min(cfg.attn_chunk, max(k_full.shape[1], 1)),
-                              causal=causal and not is_cross,
-                              window=0 if is_cross else cfg.sliding_window)
+    paged = cache is not None and "k_pages" in cache
+    call = build_attn_call(
+        cfg, mode=mode, paged=paged, per_slot=positions.ndim == 2,
+        self_aligned=(cache is None and not is_cross and positions.ndim == 1),
+        cross=is_cross, causal=causal, collect_stats=collect_stats)
+    o, stats = attention(
+        qg, k_full, v_full, call, spec=attn, q_pos=q_pos, k_pos=k_pos,
+        cache=new_cache if paged else None, page_table=page_table)
 
     o = o.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
     y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])

@@ -196,7 +196,9 @@ def apply_train(cfg, params, batch, *, collect_stats: bool = False):
     return logits, {"aux_loss": jnp.zeros((), F32), "hdp": None}
 
 
-def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False):
+def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False,
+                  attn=None):
+    del attn  # recurrent layers have no attention; accepted for uniformity
     x = L.embed_tokens(params["embed"], batch["tokens"], cfg.d_model)
     x = shd(x, "batch", "seq_act", "embed_act")
     x, new_cache = _stack(cfg, params, x, cache)
@@ -204,7 +206,9 @@ def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False):
     return L.lm_logits_sharded(params["embed"], x), new_cache, None
 
 
-def apply_decode(cfg, params, token, cache, pos, *, collect_stats: bool = False):
+def apply_decode(cfg, params, token, cache, pos, *, collect_stats: bool = False,
+                 attn=None):
+    del attn  # recurrent layers have no attention; accepted for uniformity
     x = L.embed_tokens(params["embed"], token, cfg.d_model)
     x, new_cache = _stack(cfg, params, x, cache)
     x = L.apply_norm(cfg, params["final_norm"], x)

@@ -47,12 +47,11 @@ def init_params(cfg, rng) -> Tuple[Dict, Dict]:
 
 
 def _block(cfg, lp, x, *, mode, positions, cache, collect_stats,
-           page_table=None, attn_backend="xla"):
+           page_table=None, attn=None):
     h = L.apply_norm(cfg, lp["ln1"], x)
     a, new_cache, stats = attn_apply(
         cfg, lp["attn"], h, mode=mode, positions=positions, cache=cache,
-        collect_stats=collect_stats, page_table=page_table,
-        attn_backend=attn_backend)
+        collect_stats=collect_stats, page_table=page_table, attn=attn)
     x = x + a
     h = L.apply_norm(cfg, lp["ln2"], x)
     if cfg.n_experts:
@@ -63,7 +62,7 @@ def _block(cfg, lp, x, *, mode, positions, cache, collect_stats,
 
 
 def _stack(cfg, params, x, *, mode, positions, cache, collect_stats,
-           page_table=None, attn_backend="xla"):
+           page_table=None, attn=None):
     """lax.scan over stacked layers; returns (x, new_cache, stats, aux).
 
     The KV cache rides in the scan CARRY with per-layer in-place
@@ -76,7 +75,7 @@ def _stack(cfg, params, x, *, mode, positions, cache, collect_stats,
         def body(carry, lp):
             y, _, st, aux = _block(cfg, lp, carry, mode=mode,
                                    positions=positions, cache=None,
-                                   collect_stats=collect_stats)
+                                   collect_stats=collect_stats, attn=attn)
             return y, (st, aux)
 
         if cfg.remat:
@@ -91,8 +90,7 @@ def _stack(cfg, params, x, *, mode, positions, cache, collect_stats,
             cache_all)
         y, nc, st, aux = _block(cfg, lp, y, mode=mode, positions=positions,
                                 cache=lc, collect_stats=collect_stats,
-                                page_table=page_table,
-                                attn_backend=attn_backend)
+                                page_table=page_table, attn=attn)
         cache_all = jax.tree.map(
             lambda c, n: jax.lax.dynamic_update_index_in_dim(
                 c, n.astype(c.dtype), li, 0),
@@ -138,7 +136,7 @@ def cache_specs(cfg) -> Dict:
 
 
 def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False,
-                  pos_offset=0):
+                  pos_offset=0, attn=None):
     """Run the prompt; fills cache, returns last-position logits.
 
     pos_offset (scalar, may be traced): absolute position of tokens[:, 0] —
@@ -149,14 +147,14 @@ def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False,
     positions = pos_offset + jnp.arange(tokens.shape[1])
     x, new_cache, stats, _ = _stack(cfg, params, x, mode="prefill",
                                     positions=positions, cache=cache,
-                                    collect_stats=collect_stats)
+                                    collect_stats=collect_stats, attn=attn)
     x = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
     logits = L.lm_logits_sharded(params["embed"], x)
     return logits, new_cache, stats
 
 
 def apply_decode(cfg, params, token, cache, pos, *, collect_stats: bool = False,
-                 page_table=None, attn_backend: str = "xla"):
+                 page_table=None, attn=None):
     """One decode step. token [B,1]; pos scalar int32 (aligned batch).
 
     page_table [B, nP] routes the step through the block-paged serving
@@ -169,8 +167,7 @@ def apply_decode(cfg, params, token, cache, pos, *, collect_stats: bool = False,
     x, new_cache, stats, _ = _stack(cfg, params, x, mode="decode",
                                     positions=positions, cache=cache,
                                     collect_stats=collect_stats,
-                                    page_table=page_table,
-                                    attn_backend=attn_backend)
+                                    page_table=page_table, attn=attn)
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = L.lm_logits(params["embed"], x)
     return logits, new_cache, stats

@@ -92,7 +92,7 @@ def encode(cfg, params, frames, *, collect_stats=False):
 
 
 def _decoder(cfg, params, tokens, enc_out, cache, positions, mode,
-             collect_stats=False):
+             collect_stats=False, attn=None):
     x = L.embed_tokens(params["embed"], tokens, cfg.d_model)
     x = x + L.sinusoidal_pos(tokens.shape[1], cfg.d_model,
                              offset=positions[0]).astype(x.dtype)
@@ -103,17 +103,19 @@ def _decoder(cfg, params, tokens, enc_out, cache, positions, mode,
         h = L.apply_norm(cfg, lp["ln1"], x)
         a, new_self, st = attn_apply(
             cfg, lp["self"], h, mode=mode, positions=positions,
-            cache=lc["self"] if lc else None, collect_stats=collect_stats)
+            cache=lc["self"] if lc else None, collect_stats=collect_stats,
+            attn=attn)
         x = x + a
         h = L.apply_norm(cfg, lp["ln2"], x)
         if mode == "decode":
             c, new_cross, _ = attn_apply(
                 cfg, lp["cross"], h, mode=mode, positions=positions,
-                cache=lc["cross"], static_cache=True)
+                cache=lc["cross"], static_cache=True, attn=attn)
         else:
             c, new_cross, _ = attn_apply(
                 cfg, lp["cross"], h, mode=mode, positions=positions,
-                cache=lc["cross"] if lc else None, enc_out=enc_out)
+                cache=lc["cross"] if lc else None, enc_out=enc_out,
+                attn=attn)
         x = x + c
         h = L.apply_norm(cfg, lp["ln3"], x)
         x = x + L.mlp_apply(cfg, lp["mlp"], h)
@@ -183,22 +185,25 @@ def cache_specs(cfg) -> Dict:
     return {"self": {"k": ax, "v": ax}, "cross": {"k": ax, "v": ax}}
 
 
-def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False):
+def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False,
+                  attn=None):
     """Encode audio, prime decoder on prompt tokens, fill both caches."""
     enc_out, _ = encode(cfg, params, batch["frames"],
                         collect_stats=collect_stats)
     positions = jnp.arange(batch["tokens"].shape[1])
     x, new_cache, stats = _decoder(cfg, params, batch["tokens"], enc_out,
                                    cache, positions, "prefill",
-                                   collect_stats)
+                                   collect_stats, attn=attn)
     logits = L.lm_logits_sharded(params["embed"], x[:, -1:])
     return logits, new_cache, stats
 
 
-def apply_decode(cfg, params, token, cache, pos, *, collect_stats: bool = False):
+def apply_decode(cfg, params, token, cache, pos, *, collect_stats: bool = False,
+                 attn=None):
     positions = pos[None] if jnp.ndim(pos) == 0 else pos
     x, new_cache, stats = _decoder(cfg, params, token, None, cache,
-                                   positions, "decode", collect_stats)
+                                   positions, "decode", collect_stats,
+                                   attn=attn)
     logits = L.lm_logits(params["embed"], x)
     return logits, new_cache, stats
 

@@ -100,7 +100,7 @@ def init_params(cfg, rng) -> Tuple[Dict, Dict]:
 
 
 def _apply_shared(cfg, p, h, emb0, lora_a, lora_b, *, mode, positions,
-                  cache, collect_stats):
+                  cache, collect_stats, attn=None):
     """One invocation of the shared block; returns (h', new_cache, stats)."""
     scfg = _shared_cfg(cfg)
     x = jnp.concatenate([h, emb0], axis=-1)
@@ -114,7 +114,7 @@ def _apply_shared(cfg, p, h, emb0, lora_a, lora_b, *, mode, positions,
         attn_p[w] = attn_p[w] + delta
     a, new_cache, stats = attn_apply(scfg, attn_p, hln, mode=mode,
                                      positions=positions, cache=cache,
-                                     collect_stats=collect_stats)
+                                     collect_stats=collect_stats, attn=attn)
     x = x + a
     hln = L.rms_norm(x, p["ln2"]["w"])
     m = jax.nn.silu(hln @ p["mlp"]["w_gate"]) * (hln @ p["mlp"]["w_up"])
@@ -122,7 +122,8 @@ def _apply_shared(cfg, p, h, emb0, lora_a, lora_b, *, mode, positions,
     return h + x @ p["proj_out"], new_cache, stats
 
 
-def _run(cfg, params, tokens_or_x, *, mode, positions, cache, collect_stats):
+def _run(cfg, params, tokens_or_x, *, mode, positions, cache, collect_stats,
+         attn=None):
     if tokens_or_x.ndim == 2:
         x = L.embed_tokens(params["embed"], tokens_or_x, cfg.d_model)
     else:
@@ -153,7 +154,7 @@ def _run(cfg, params, tokens_or_x, *, mode, positions, cache, collect_stats):
             x, _ac, stats = _apply_shared(cfg, params["shared"], x, emb0,
                                           xs_g["lora_a"], xs_g["lora_b"],
                                           mode=mode, positions=positions,
-                                          cache=None,
+                                          cache=None, attn=attn,
                                           collect_stats=collect_stats)
             return (x, 0), stats
 
@@ -178,7 +179,7 @@ def _run(cfg, params, tokens_or_x, *, mode, positions, cache, collect_stats):
                 cfg, params["shared"], x, emb0, xs_g["lora_a"],
                 xs_g["lora_b"], mode=mode, positions=positions,
                 cache=jax.tree.map(take, cache_all["attn"]),
-                collect_stats=collect_stats)
+                collect_stats=collect_stats, attn=attn)
             cache_all = {
                 "mamba": jax.tree.map(put, cache_all["mamba"], new_mc),
                 "attn": jax.tree.map(put, cache_all["attn"], new_ac),
@@ -240,20 +241,23 @@ def cache_specs(cfg) -> Dict:
     return out
 
 
-def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False):
+def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False,
+                  attn=None):
     tokens = batch["tokens"]
     x, new_cache, stats = _run(cfg, params, tokens, mode="prefill",
                                positions=jnp.arange(tokens.shape[1]),
-                               cache=cache, collect_stats=collect_stats)
+                               cache=cache, collect_stats=collect_stats,
+                               attn=attn)
     x = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
     return L.lm_logits_sharded(params["embed"], x), new_cache, stats
 
 
-def apply_decode(cfg, params, token, cache, pos, *, collect_stats: bool = False):
+def apply_decode(cfg, params, token, cache, pos, *, collect_stats: bool = False,
+                 attn=None):
     positions = pos[None] if jnp.ndim(pos) == 0 else pos
     x, new_cache, stats = _run(cfg, params, token, mode="decode",
                                positions=positions, cache=cache,
-                               collect_stats=collect_stats)
+                               collect_stats=collect_stats, attn=attn)
     x = L.apply_norm(cfg, params["final_norm"], x)
     return L.lm_logits(params["embed"], x), new_cache, stats
 

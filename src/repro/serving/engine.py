@@ -32,9 +32,13 @@ decode is token-for-token identical to the dense backend.
 HDP is active inside both prefill and decode attention when
 ``cfg.hdp.enabled`` — stats (block/head/page sparsity per layer) are
 aggregated into engine metrics so serving examples/benchmarks can report
-the achieved sparsity next to throughput. ``attn_backend="pallas"``
-routes the paged HDP decode through the block-sparse Pallas kernel
-(interpret mode off-TPU).
+the achieved sparsity next to throughput. Attention implementation and
+cache layout are selected by an ``repro.attention.AttnSpec``
+(``attn=AttnSpec(backend="pallas")`` routes the paged HDP decode through
+the block-sparse Pallas kernel, interpret mode off-TPU); the resolved
+backend per phase is reported by ``summary()``. The old
+``cache_backend=``/``attn_backend=`` string kwargs keep working for one
+release through a deprecation shim.
 """
 from __future__ import annotations
 
@@ -46,8 +50,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.attention import (AttnSpec, default_spec, known_backend_names,
+                             resolve_backend, spec_from_legacy)
 from repro.configs.base import ModelConfig
 from repro.models import registry
+from repro.models.attention import build_attn_call
 from repro.serving import kv_cache
 
 I32 = jnp.int32
@@ -84,12 +91,15 @@ class Engine:
     max_len: serving cache length (prompt + generation must fit).
     prefill_buckets: pad-to lengths for the prefill jit cache.
     collect_stats: aggregate HDP sparsity stats (small overhead).
-    cache_backend: "paged" | "dense" | "auto" (paged for transformer
-        families, dense otherwise).
-    attn_backend: "xla" | "pallas" — implementation of the paged HDP
-        decode attention (pallas = the FUM block-sparse kernel, interpret
-        mode off-TPU).
-    page_size: paged-backend page length; defaults to ``hdp.block_k``
+    attn: AttnSpec (or a backend name/tag string) selecting both the
+        attention backend (auto | reference | xla | pallas | an exact
+        registry name) and the serving cache layout
+        (``AttnSpec(layout=...)``: auto = paged for transformer families,
+        dense otherwise). None uses the default spec (honors the
+        REPRO_ATTN_BACKEND env var).
+    cache_backend / attn_backend: DEPRECATED string kwargs, mapped onto
+        ``attn`` via a shim for one release (emits a DeprecationWarning).
+    page_size: paged-layout page length; defaults to ``hdp.block_k``
         (must match it while HDP is enabled).
     """
 
@@ -97,22 +107,31 @@ class Engine:
                  max_batch: int = 4, max_len: int = 128,
                  prefill_buckets: Sequence[int] = (32, 64, 128),
                  collect_stats: bool = False,
-                 cache_backend: str = "auto", attn_backend: str = "xla",
+                 attn: Optional[AttnSpec] = None,
+                 cache_backend: Optional[str] = None,
+                 attn_backend: Optional[str] = None,
                  page_size: Optional[int] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "enc-dec serving uses launch/serve.py --arch whisper path")
-        if cache_backend == "auto":
-            cache_backend = ("paged" if cfg.family in PAGEABLE_FAMILIES
-                             else "dense")
-        if cache_backend not in ("paged", "dense"):
-            raise ValueError(f"unknown cache_backend {cache_backend!r}")
-        if cache_backend == "paged" and cfg.family not in PAGEABLE_FAMILIES:
+        if isinstance(attn, str):
+            attn = AttnSpec(backend=attn)
+        spec = attn if attn is not None else default_spec()
+        if attn_backend is not None or cache_backend is not None:
+            spec = spec_from_legacy(attn_backend, cache_backend, base=spec)
+        for phase in ("prefill", "decode"):
+            req = spec.requested_for(phase)
+            if req != "auto" and req not in known_backend_names():
+                raise ValueError(
+                    f"unknown attention backend {req!r} ({phase}); "
+                    f"known: {known_backend_names()}")
+        layout = spec.layout
+        if layout == "auto":
+            layout = ("paged" if cfg.family in PAGEABLE_FAMILIES else "dense")
+        if layout == "paged" and cfg.family not in PAGEABLE_FAMILIES:
             raise ValueError(
-                f"family {cfg.family!r} has no KV pages; use dense backend")
-        if attn_backend not in ("xla", "pallas"):
-            raise ValueError(f"unknown attn_backend {attn_backend!r}")
-        if (cache_backend == "paged" and cfg.hdp is not None
+                f"family {cfg.family!r} has no KV pages; use dense layout")
+        if (layout == "paged" and cfg.hdp is not None
                 and cfg.hdp.enabled and cfg.hdp.calib != "none"):
             # write-time scout quantization cannot honor a data-dependent
             # calibration scale; pin the static grid for prefill + decode
@@ -125,8 +144,8 @@ class Engine:
         self.buckets = sorted(b for b in prefill_buckets if b <= max_len) \
             or [max_len]
         self.collect_stats = collect_stats
-        self.paged = cache_backend == "paged"
-        self.attn_backend = attn_backend
+        self.paged = layout == "paged"
+        self.attn_spec = spec
 
         if params is None:
             rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -162,19 +181,20 @@ class Engine:
         batch = {"tokens": tokens}
         logits, new_cache, stats = registry.apply_prefill(
             self.cfg, params, batch, cache,
-            collect_stats=self.collect_stats)
+            collect_stats=self.collect_stats, attn=self.attn_spec)
         return logits, new_cache, stats
 
     def _prefill_chunk_fn(self, params, tokens, cache, offset):
         _, new_cache, stats = registry.apply_prefill(
             self.cfg, params, {"tokens": tokens}, cache,
-            collect_stats=self.collect_stats, pos_offset=offset)
+            collect_stats=self.collect_stats, pos_offset=offset,
+            attn=self.attn_spec)
         return new_cache, stats
 
     def _decode_fn(self, params, token, cache, pos):
         logits, new_cache, stats = registry.apply_decode(
             self.cfg, params, token, cache, pos[:, None],
-            collect_stats=self.collect_stats)
+            collect_stats=self.collect_stats, attn=self.attn_spec)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(I32)[:, None]
         return nxt, new_cache, stats
 
@@ -182,7 +202,7 @@ class Engine:
         logits, new_cache, stats = registry.apply_decode(
             self.cfg, params, token, cache, pos[:, None],
             collect_stats=self.collect_stats, page_table=table,
-            attn_backend=self.attn_backend)
+            attn=self.attn_spec)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(I32)[:, None]
         return nxt, new_cache, stats
 
@@ -319,20 +339,20 @@ class Engine:
 
     # -------------------------------------------------------------- metrics
     def _record_stats(self, stats) -> None:
+        """Accumulate one AttnStats sample (leaves carry a layer dim)."""
         if not self.collect_stats or stats is None:
             return
-        try:
-            bs = float(jnp.mean(stats["block_sparsity"]))
-            hs = float(jnp.mean(stats["head_sparsity"]))
-        except (KeyError, TypeError):
+        bs = getattr(stats, "block_sparsity", None)
+        hs = getattr(stats, "head_sparsity", None)
+        if bs is None or hs is None:
             return
         m = self.metrics
-        m["block_sparsity"] += bs
-        m["head_sparsity"] += hs
-        if isinstance(stats, dict) and "page_sparsity" in stats:
-            # decode-only key: averaged over its own sample count so
+        m["block_sparsity"] += float(jnp.mean(bs))
+        m["head_sparsity"] += float(jnp.mean(hs))
+        if getattr(stats, "page_sparsity", None) is not None:
+            # decode-only field: averaged over its own sample count so
             # prefill records don't dilute it
-            m["page_sparsity"] += float(jnp.mean(stats["page_sparsity"]))
+            m["page_sparsity"] += float(jnp.mean(stats.page_sparsity))
             m["page_samples"] += 1
         m["stat_samples"] += 1
 
@@ -396,6 +416,23 @@ class Engine:
             steps += 1
         return dict(self._results)
 
+    def resolved_backend(self, phase: str) -> str:
+        """Name of the backend the registry resolves for a serving phase.
+
+        ``phase``: "prefill" | "decode". Uses the SAME call constructor
+        as ``attn_apply`` (models.attention.build_attn_call), so the
+        report cannot drift from the dispatch. Families without attention
+        layers (recurrent) report "none".
+        """
+        if self.cfg.family in ("rwkv6",):
+            return "none"
+        call = build_attn_call(
+            self.cfg, mode=phase,
+            paged=self.paged and phase == "decode",
+            per_slot=phase == "decode",
+            collect_stats=self.collect_stats)
+        return resolve_backend(call, self.attn_spec).name
+
     # ------------------------------------------------------------- reporting
     def summary(self) -> Dict[str, float]:
         m = dict(self.metrics)
@@ -407,6 +444,8 @@ class Engine:
         if m["page_samples"]:
             m["page_sparsity"] /= m["page_samples"]
         m["cache_backend"] = "paged" if self.paged else "dense"
+        m["attn_backend_prefill"] = self.resolved_backend("prefill")
+        m["attn_backend_decode"] = self.resolved_backend("decode")
         if self.paged:
             # resident bytes at the allocation high-water mark — what a
             # demand-sized pool must hold (the pool itself is max-sized

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.attention import AttnSpec
 from repro.configs import get_config
 from repro.configs.base import reduced
 from repro.core.config import HDPConfig
@@ -111,7 +112,7 @@ def test_paged_decode_equals_dense_decode(mode):
     if mode == "hdp_stock":
         assert eng.cfg.hdp.calib == "none", "paged engine must pin calib"
         cfg = _qwen(calib="none")
-    _, dense = _serve(cfg, eng.params, prompts, cache_backend="dense")
+    _, dense = _serve(cfg, eng.params, prompts, attn=AttnSpec(layout="dense"))
     assert paged == dense, f"{mode}: paged {paged} != dense {dense}"
 
 
@@ -230,5 +231,5 @@ def test_pallas_attn_backend_matches_xla(arch):
     prompts = _prompts(2, seed=11)
     eng, xla = _serve(cfg, None, prompts, max_new=4)
     _, pallas = _serve(cfg, eng.params, prompts, max_new=4,
-                       attn_backend="pallas")
+                       attn=AttnSpec(backend="pallas"))
     assert xla == pallas
