@@ -1,6 +1,7 @@
 """Benchmark harness — one entry per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+        [--json [PATH]] [--horizon H]
 
 | name           | paper artifact                 |
 |----------------|--------------------------------|
@@ -16,32 +17,52 @@
 Accuracy is proxied by top-1 next-token agreement vs the dense model on
 held-out synthetic data (no GLUE checkpoints offline — substitution
 documented in DESIGN.md §1). All output is CSV-ish text; bench_output.txt
-is the canonical artifact.
+is the canonical artifact. ``--json`` additionally persists the serving
+rows to BENCH_serving.json at the repo root (preserving the recorded
+pre-existing ``baseline`` block) so the decode-path perf trajectory is
+tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
+#: default artifact path for --json (repo root, next to this package)
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serving.json")
 
-def bench_serving(quick: bool = False, backend: str = "auto"):
+
+def bench_serving(quick: bool = False, backend: str = "auto",
+                  horizon: int = 4):
+    """End-to-end engine throughput, fused-decode-loop A/B included.
+
+    Rows come in pairs per arch: decode_horizon=1 (per-token stepping,
+    the pre-fusion hot path) and decode_horizon=``horizon`` — same
+    engine, same tokens, one host sync per horizon."""
     from repro.launch import serve
 
     rows = []
     for arch in ("qwen2-1.5b", "granite-8b"):
         for no_hdp in (False, True):
-            args = serve.build_parser().parse_args(
-                ["--arch", arch, "--requests", "4" if quick else "8",
-                 "--max-new", "4" if quick else "6", "--backend", backend]
-                + (["--no-hdp"] if no_hdp else []))
-            # every row records the RESOLVED backend per phase
-            # (attn_prefill / attn_decode), so A/B rows stay attributable
-            # when auto-selection or fallback changes
-            out = serve.run(args)
-            rows.append({"arch": arch, "hdp": not no_hdp, **out})
-    print("# serving (reduced configs, continuous batching)")
+            for h in dict.fromkeys((1, horizon)):
+                # max-new 24 (vs the functional benches' 6) so decode
+                # spans enough steps for a stable steady-state tok/s
+                args = serve.build_parser().parse_args(
+                    ["--arch", arch, "--requests", "4" if quick else "8",
+                     "--max-new", "8" if quick else "24",
+                     "--backend", backend, "--decode-horizon", str(h),
+                     "--warmup"]
+                    + (["--no-hdp"] if no_hdp else []))
+                # every row records the RESOLVED backend per phase
+                # (attn_prefill / attn_decode), so A/B rows stay
+                # attributable when auto-selection or fallback changes
+                out = serve.run(args)
+                rows.append({"arch": arch, "hdp": not no_hdp, **out})
+    print("# serving (reduced configs, continuous batching, horizon A/B)")
     hdr = list(rows[0].keys())
     print(",".join(str(h) for h in hdr))
     for r in rows:
@@ -67,7 +88,7 @@ def bench_serving_paged(quick: bool = False, backend: str = "auto"):
             args = serve.build_parser().parse_args(
                 ["--arch", arch, "--requests", "4" if quick else "8",
                  "--max-new", "4" if quick else "6", "--backend", backend,
-                 "--layout", layout, "--calib", "none"])
+                 "--layout", layout, "--calib", "none", "--warmup"])
             out = serve.run(args)
             row = {"arch": arch, **out}
             row["backend"] = layout  # the A/B independent variable
@@ -115,6 +136,67 @@ def _register():
 _BACKEND_AWARE = ("serving", "serving_paged")
 
 
+def write_bench_json(path: str, results: dict, *, quick: bool,
+                     horizon: int) -> None:
+    """Persist serving rows to ``path``, preserving the ``baseline`` block.
+
+    The file tracks the decode-path perf trajectory across PRs:
+    ``baseline`` is written once (the oldest recorded run, kept verbatim
+    on every later write) and ``current`` is replaced per run. Rows carry
+    decode_tok_s, decode_s_per_tok, cache_bytes and the achieved
+    block/head/page sparsity per arch x hdp x horizon cell.
+    """
+    rows = []
+    for name in _BACKEND_AWARE:
+        for r in results.get(name) or []:
+            row = {"bench": name, **r}
+            if r.get("decode_tok_s"):
+                row["decode_s_per_tok"] = round(1.0 / r["decode_tok_s"], 6)
+            rows.append(row)
+    if not rows:
+        print(f"!! --json: no serving rows collected; {path} not written")
+        return
+    prev = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+        except (OSError, ValueError):
+            prev = {}
+    current = {"quick": quick, "decode_horizon": horizon, "rows": rows}
+    data = {"baseline": prev.get("baseline") or current, "current": current}
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    if data["baseline"].get("quick") != quick:
+        print("## baseline was recorded at a different --quick setting; "
+              "tok/s comparison skipped")
+    else:
+        base_rows = data["baseline"].get("rows", [])
+
+        def key(r):  # backend disambiguates serving_paged's layout A/B rows
+            return (r.get("arch"), r.get("hdp"), r.get("bench"),
+                    r.get("backend"))
+
+        by_h = {}
+        for r in rows:
+            for b in base_rows:
+                if key(b) == key(r) and b.get("decode_tok_s") \
+                        and r.get("decode_tok_s"):
+                    # baseline rows are per-token (horizon 1); grouping
+                    # current rows by their horizon makes the fused-loop
+                    # speedup vs the per-token baseline explicit
+                    by_h.setdefault(r.get("decode_horizon", 1), []).append(
+                        r["decode_tok_s"] / b["decode_tok_s"])
+                    break
+        for h in sorted(by_h):
+            pairs = by_h[h]
+            print(f"## decode tok/s vs baseline (horizon={h}): "
+                  f"x{sum(pairs)/len(pairs):.2f} "
+                  f"(mean over {len(pairs)} comparable rows)")
+    print(f"## wrote {path}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -125,10 +207,20 @@ def main(argv=None) -> int:
                     help="attention backend name/tag for the serving "
                          "benches; the resolved (post-fallback) backend is "
                          "recorded per output row")
+    ap.add_argument("--horizon", type=int, default=4,
+                    help="fused decode horizon for the serving benches "
+                         "(each arch also records a horizon=1 row for the "
+                         "per-token A/B)")
+    ap.add_argument("--json", nargs="?", const=BENCH_JSON, default=None,
+                    metavar="PATH",
+                    help="write serving rows to PATH (default "
+                         "BENCH_serving.json at the repo root), preserving "
+                         "the recorded baseline block")
     args = ap.parse_args(argv)
     _register()
     names = list(BENCHES) if not args.only else args.only.split(",")
     failures = []
+    results = {}
     for name in names:
         if name not in BENCHES:
             print(f"!! unknown benchmark {name}; have {sorted(BENCHES)}")
@@ -139,13 +231,18 @@ def main(argv=None) -> int:
         kw = {"quick": args.quick}
         if name in _BACKEND_AWARE:
             kw["backend"] = args.backend
+        if name == "serving":
+            kw["horizon"] = args.horizon
         try:
-            BENCHES[name](**kw)
+            results[name] = BENCHES[name](**kw)
             print(f"===== {name} done in {time.time()-t0:.0f}s =====",
                   flush=True)
         except Exception:  # noqa: BLE001 — keep the harness going
             failures.append(name)
             traceback.print_exc()
+    if args.json:
+        write_bench_json(args.json, results, quick=args.quick,
+                         horizon=args.horizon)
     if failures:
         print(f"\nFAILED: {failures}")
         return 1

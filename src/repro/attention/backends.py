@@ -1,20 +1,24 @@
 """The production backends, ported from the former ad-hoc entry points.
 
-Six implementations, one registry (reference lives in reference.py):
+Seven implementations, one registry (reference lives in reference.py):
 
-| backend           | ports                                        | calls it supports                    |
-|-------------------|----------------------------------------------|--------------------------------------|
-| xla_dense         | chunked/local/decode_attention               | HDP off (dense; paged decode)        |
-| xla_hdp           | hdp_prefill/decode_attention                 | HDP on, dense layout                 |
-| paged_hdp_decode  | hdp_paged_decode_attention (XLA stage 3)     | HDP on, paged decode                 |
-| pallas_flash      | kernels.flash_attention                      | HDP off, aligned self-attn prefill   |
-| pallas_hdp_block  | kernels.ops.hdp_attention_tpu / FUM stage 3  | HDP on, aligned prefill or paged     |
+| backend            | ports                                        | calls it supports                    |
+|--------------------|----------------------------------------------|--------------------------------------|
+| xla_dense          | chunked/local/decode_attention               | HDP off (dense; paged decode)        |
+| xla_hdp            | hdp_prefill/decode_attention                 | HDP on, dense layout                 |
+| paged_hdp_decode   | hdp_paged_decode_attention (XLA stage 3)     | HDP on, paged decode                 |
+| pallas_flash       | kernels.flash_attention                      | HDP off, aligned self-attn prefill   |
+| pallas_hdp_block   | kernels.ops.hdp_attention_tpu / FUM stage 3  | HDP on, aligned prefill or paged     |
+| pallas_paged_decode| kernels.hdp_paged_decode (gather-free FUM)   | HDP on, causal unwindowed paged      |
 
-Pallas backends rank above XLA only on TPU; off-TPU they run in
-interpret mode when explicitly requested and are never auto-selected.
-Neither has a VJP, so neither supports trainable calls, and the FUM
-kernel's per-row validity (cols < kv_len) cannot express a sliding
-window's lower bound — windowed calls fall back to the XLA chain.
+Pallas backends rank above XLA only on TPU (``pallas_paged_decode``
+out-ranks ``pallas_hdp_block`` there: it streams surviving pages straight
+from the pool instead of densifying first, so pruned pages cost no HBM
+traffic at all); off-TPU they run in interpret mode when explicitly
+requested and are never auto-selected. None has a VJP, so none supports
+trainable calls, and the FUM kernels' per-row validity (cols < kv_len)
+cannot express a sliding window's lower bound — windowed calls fall back
+to the XLA chain.
 """
 from __future__ import annotations
 
@@ -79,11 +83,11 @@ def _supports_paged_hdp(call: AttnCall) -> bool:
     return call.hdp is not None and call.layout == "paged"
 
 
-def _run_paged(q, call, *, q_pos, k_pos, cache, page_table, pallas):
+def _run_paged(q, call, *, q_pos, k_pos, cache, page_table, stage3):
     out, st = A.hdp_paged_decode_attention(
         q, cache["k_pages"], cache["v_pages"], cache["k_scout"], page_table,
         q_pos=q_pos, k_pos=k_pos, hdp=call.hdp, window=call.window,
-        return_stats=call.needs_stats, pallas=pallas)
+        return_stats=call.needs_stats, stage3=stage3)
     return out, normalize_stats(st)
 
 
@@ -92,7 +96,7 @@ def _run_paged(q, call, *, q_pos, k_pos, cache, page_table, pallas):
 def run_paged_hdp_decode(q, k, v, call, *, q_pos, k_pos, cache=None,
                          page_table=None):
     return _run_paged(q, call, q_pos=q_pos, k_pos=k_pos, cache=cache,
-                      page_table=page_table, pallas=False)
+                      page_table=page_table, stage3="xla")
 
 
 # --------------------------------------------------------------- pallas_flash
@@ -131,10 +135,33 @@ def run_pallas_hdp_block(q, k, v, call, *, q_pos, k_pos, cache=None,
                          page_table=None):
     if call.layout == "paged":
         return _run_paged(q, call, q_pos=q_pos, k_pos=k_pos, cache=cache,
-                          page_table=page_table, pallas=True)
+                          page_table=page_table, stage3="pallas_block")
     from repro.kernels.ops import hdp_attention_tpu
     B, N, G, Sq, hd = q.shape
     out, st = hdp_attention_tpu(
         q.reshape(B, N * G, Sq, hd), _heads(k, G), _heads(v, G), call.hdp,
         return_stats=call.needs_stats)
     return out.reshape(B, N, G, Sq, hd), normalize_stats(st)
+
+
+# --------------------------------------------------------- pallas_paged_decode
+def _supports_pallas_paged(call: AttnCall) -> bool:
+    """Gather-free FUM decode: page table drives the kernel's DMA directly.
+
+    Needs the plain causal paged-decode shape: the kernel's per-row
+    validity is ``cols < kv_len`` (upper bound only), which is exactly the
+    causal mask of single-token decode but cannot express a sliding
+    window's lower bound or a non-causal extent.
+    """
+    return (call.hdp is not None and call.layout == "paged"
+            and call.mode == "decode" and not call.trainable
+            and call.window == 0 and not call.hdp.approx_softmax
+            and call.causal and call.hdp.causal)
+
+
+@register_backend("pallas_paged_decode", supports=_supports_pallas_paged,
+                  priority=6, tpu_priority=25, tags=("pallas",))
+def run_pallas_paged_decode(q, k, v, call, *, q_pos, k_pos, cache=None,
+                            page_table=None):
+    return _run_paged(q, call, q_pos=q_pos, k_pos=k_pos, cache=cache,
+                      page_table=page_table, stage3="pallas_paged")

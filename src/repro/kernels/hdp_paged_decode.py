@@ -1,0 +1,136 @@
+"""Gather-free paged FUM decode kernel — page-table-native Fetch-Upon-Mask.
+
+The block-sparse kernel in ``hdp_block_attn`` consumes contiguous K/V, so
+the paged serving path had to gather surviving pages into a dense slab
+first — O(B*Sk) memory traffic regardless of how many pages the scout
+pruned. This kernel removes the gather entirely: the *page pool* is the
+kernel input, and scalar-prefetched per-row lists of surviving pool page
+ids drive the K/V BlockSpec index maps. A pruned page's id never appears
+in the list, so its HBM is never DMA'd — the paper's co-processor
+dataflow, now honored at the memory system level for serving decode.
+
+Grid is (B, N, max_keep): one batch row x kv head per program, streaming
+that row's kept pages in ascending logical order (monotone DMA). The G
+query heads of a GQA group ride in the block's sublane dim and share the
+page stream; per-query-head keep masks still apply inside the softmax.
+K arrives full-precision from the pool and is snapped to the fixed-point
+grid on the VPU (trunc/round cost no extra HBM traffic), matching the
+write-time-quantized semantics of the XLA stage exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.quant import int_frac_split, quantize_fixed
+from repro.kernels.compat import tpu_compiler_params
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _kernel(pid_ref, logical_ref, cnt_ref, len_ref,   # scalar prefetch
+            q_ref, k_ref, v_ref, keep_ref, o_ref,     # tensors
+            acc_ref, m_ref, l_ref,                    # scratch
+            *, scale, approx, int_bits, frac_bits, ps, max_keep):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(j < cnt_ref[b])
+    def _body():
+        q = q_ref[0, 0].astype(F32)                   # [G, hd] (fixed grid)
+        k = k_ref[0, :, 0].astype(F32)                # [ps, hd] pool page
+        # snap the full-precision page to the write-time scout's grid on
+        # the VPU (the shared core.quant ops are plain jnp — safe here)
+        kq = quantize_fixed(k, int_bits, frac_bits)
+        s = jax.lax.dot_general(q, kq, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32)
+        if approx:
+            fq = int_frac_split(q)[1]
+            fk = int_frac_split(kq)[1]
+            s = s - jax.lax.dot_general(fq, fk, (((1,), (1,)), ((), ())),
+                                        preferred_element_type=F32)
+        s = s * scale
+        cols = logical_ref[b, j] * ps + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        valid = cols < len_ref[b]
+        valid = valid & (keep_ref[0, 0, 0] > 0)[:, None]
+        s = jnp.where(valid, s, NEG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p.astype(v_ref.dtype), v_ref[0, :, 0],
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=F32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(j == max_keep - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "approx", "int_bits", "frac_bits", "interpret"))
+def hdp_paged_fum_decode(qq, k_pool, v_pool, page_ids, logical, counts,
+                         keep, kv_len, *, approx: bool = True,
+                         int_bits: int = 4, frac_bits: int = 12,
+                         interpret: bool = False):
+    """qq [B,N,G,hd] fixed-grid query; k/v_pool [P,ps,N,hd] page pools;
+    page_ids/logical [B,mk] int32 (pool id / slot position of each kept
+    page, scratch-0-padded past counts); counts [B] int32 kept pages per
+    row; keep [B,mk,N,G] int32 per-query-head keep; kv_len [B] int32
+    valid KV extent (pos+1). Returns [B,N,G,hd] (head gate applied by
+    the caller). Pages absent from ``page_ids`` are never read.
+    """
+    B, N, G, hd = qq.shape
+    _, ps, _, _ = k_pool.shape
+    mk = page_ids.shape[1]
+    kernel = functools.partial(
+        _kernel, scale=1.0 / (hd ** 0.5), approx=approx, int_bits=int_bits,
+        frac_bits=frac_bits, ps=ps, max_keep=mk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, N, mk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, n, j, pid, lg, c, le: (b, n, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, n, j, pid, lg, c, le: (pid[b, j], 0, n, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, n, j, pid, lg, c, le: (pid[b, j], 0, n, 0)),
+            pl.BlockSpec((1, 1, 1, G),
+                         lambda b, n, j, pid, lg, c, le: (b, j, n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, n, j, pid, lg, c, le: (b, n, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), F32),
+            pltpu.VMEM((G, 1), F32),
+            pltpu.VMEM((G, 1), F32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, N, G, hd), qq.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_ids, logical, counts, kv_len, qq, k_pool, v_pool, keep)

@@ -55,6 +55,16 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--calib", default=None,
                     help="override hdp calibration (the paged scout stores "
                          "a write-time int8 copy, i.e. calib-free)")
+    ap.add_argument("--decode-horizon", type=int, default=None,
+                    help="tokens per fused decode call (jitted lax.scan "
+                         "loop): one host sync per horizon instead of per "
+                         "token, token-identical to 1; default honors "
+                         "REPRO_DECODE_HORIZON, else 1")
+    ap.add_argument("--warmup", action="store_true",
+                    help="run one throwaway request through the engine and "
+                         "reset metrics before serving, so reported tok/s "
+                         "is steady-state rather than jit-compile time "
+                         "(what the benchmark A/B records)")
     return ap
 
 
@@ -81,7 +91,16 @@ def run(args) -> dict:
                                 base=spec)
     eng = Engine(cfg, max_batch=args.max_batch, max_len=args.max_len,
                  prefill_buckets=(16, 32, 64),
-                 collect_stats=not args.no_hdp, attn=spec)
+                 collect_stats=not args.no_hdp, attn=spec,
+                 decode_horizon=args.decode_horizon)
+    if getattr(args, "warmup", False):
+        # one throwaway request compiles the prefill/decode jits (same
+        # max_new as the real batch, so every fused-loop scan length the
+        # drain will need is warm), then the counters restart from zero
+        eng.submit(Request(-1, [1, 2, 3, 4], max_new_tokens=args.max_new))
+        eng.run()
+        eng._results.pop(-1, None)
+        eng.reset_metrics()
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):
         plen = int(rng.integers(4, min(48, args.max_len - args.max_new)))
@@ -99,6 +118,7 @@ def run(args) -> dict:
         # attributable ground truth for benchmark A/B rows
         "attn_prefill": s["attn_backend_prefill"],
         "attn_decode": s["attn_backend_decode"],
+        "decode_horizon": eng.horizon,
         "decode_tok_s": round(s.get("decode_tok_s", 0.0), 2),
         "prefill_s_total": round(s["prefill_s"], 3),
         "prefill_calls": s["prefill_calls"],

@@ -356,10 +356,107 @@ def scout_int8(k, hdp: HDPConfig):
     return _fixed_split(k, hdp)[1].astype(jnp.int8)
 
 
+def _paged_scan_attention(qq, fq, k_pool, v_pool, gather_idx, keep, valid,
+                          head_kept, *, hdp: HDPConfig, ps: int, cpp: int,
+                          scale: float):
+    """Stage 2+3 as an online-softmax scan over page chunks.
+
+    Peak stage-2 memory is O(B * cpp * ps) — one chunk of gathered pages —
+    instead of the O(B * Sk) dense materialization; pruned pages stay
+    scratch-redirected, so their full-precision memory is never read.
+    Reduction order differs from the one-shot dense softmax by page-chunk
+    grouping (ULP-level output differences across the chunk boundary).
+    """
+    B, N, G, Sq, hd = qq.shape
+    nP = gather_idx.shape[1]
+    nc = -(-nP // cpp)
+    pad = nc * cpp - nP
+    Sk = nP * ps
+    idx_p = jnp.pad(gather_idx, ((0, 0), (0, pad)))       # pads -> scratch
+    keep_p = jnp.pad(keep, ((0, 0),) * 3 + ((0, pad),))   # pads -> masked
+    valid_f = jnp.broadcast_to(valid, (B, 1, 1, Sq, Sk))
+    valid_p = jnp.pad(valid_f, ((0, 0),) * 4 + ((0, pad * ps),))
+
+    idx_c = jnp.moveaxis(idx_p.reshape(B, nc, cpp), 1, 0)
+    keep_c = jnp.moveaxis(keep_p.reshape(B, N, G, nc, cpp), 3, 0)
+    valid_c = jnp.moveaxis(
+        valid_p.reshape(B, 1, 1, Sq, nc, cpp * ps), 4, 0)
+
+    m0 = jnp.full((B, N, G, Sq), _NEG, F32)
+    l0 = jnp.zeros((B, N, G, Sq), F32)
+    a0 = jnp.zeros((B, N, G, Sq, hd), F32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        idx_i, keep_i, valid_i = xs
+        k_i = k_pool[idx_i].reshape(B, cpp * ps, N, hd)
+        v_i = v_pool[idx_i].reshape(B, cpp * ps, N, hd)
+        kq_i, _, fk_i = _fixed_split(k_i, hdp)
+        s = jnp.einsum("bngqh,bsnh->bngqs", qq, kq_i,
+                       preferred_element_type=F32)
+        if hdp.approx:
+            s = s - jnp.einsum("bngqh,bsnh->bngqs", fq, fk_i,
+                               preferred_element_type=F32)
+        s = s * scale
+        keep_e = jnp.repeat(keep_i, ps, axis=-1)[..., None, :] & valid_i
+        s = jnp.where(keep_e, s, _NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(keep_e, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        pv = jnp.einsum("bngqs,bsnh->bngqh", p.astype(v_i.dtype), v_i,
+                        preferred_element_type=F32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    (_, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (idx_c, keep_c, valid_c))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out * head_kept[..., None, None].astype(out.dtype)
+
+
+def _paged_fum_kernel_stage3(qq, k_pool, v_pool, table, keep, head_kept,
+                             q_pos, *, hdp: HDPConfig, ps: int):
+    """Stage 2+3 through the gather-free Pallas kernel.
+
+    Compresses the OR-over-heads page fetch list to (pool page ids,
+    logical slot positions, counts) — the scalar-prefetch arrays whose
+    values drive the kernel's K/V BlockSpec index maps, so surviving
+    pages stream straight from the pool and pruned pages are never DMA'd
+    (no gathered intermediate at all).
+    """
+    from repro.kernels.hdp_paged_decode import hdp_paged_fum_decode
+    from repro.kernels.ops import _auto_interpret
+
+    B, N, G, Sq, hd = qq.shape
+    assert Sq == 1, "paged FUM kernel is a single-token decode stage"
+    nP = table.shape[1]
+    fetched = (keep & head_kept[..., None]).any(axis=(1, 2))     # [B, nP]
+    # kept pages in ascending logical order (monotone pool DMA), padded
+    # with the scratch page past each row's count
+    big = jnp.iinfo(jnp.int32).max
+    key = jnp.where(fetched, jnp.arange(nP, dtype=jnp.int32)[None], big)
+    logical = jnp.sort(key, axis=-1)
+    counts = fetched.sum(-1).astype(jnp.int32)
+    in_range = jnp.arange(nP)[None] < counts[:, None]
+    logical = jnp.where(in_range, logical, 0)
+    page_ids = jnp.where(in_range,
+                         jnp.take_along_axis(table, logical, axis=1), 0)
+    keep_sel = jnp.take_along_axis(keep, logical[:, None, None, :], axis=-1)
+    keep_in = keep_sel.transpose(0, 3, 1, 2).astype(jnp.int32)   # [B,nP,N,G]
+    kv_len = (q_pos.reshape(B, Sq)[:, -1] + 1).astype(jnp.int32)
+    out = hdp_paged_fum_decode(
+        qq.reshape(B, N, G, hd), k_pool, v_pool, page_ids, logical, counts,
+        keep_in, kv_len, approx=hdp.approx, int_bits=hdp.int_bits,
+        frac_bits=hdp.frac_bits, interpret=_auto_interpret(None))
+    out = out.reshape(B, N, G, Sq, hd)
+    return out * head_kept[..., None, None].astype(out.dtype)
+
+
 def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
                                q_pos, k_pos, hdp: HDPConfig, window: int = 0,
                                return_stats: bool = False,
-                               pallas: bool = False):
+                               stage3: str = "xla", page_chunk: int = 128):
     """HDP decode over a block-paged KV cache — the FUM dataflow in XLA.
 
     q [B,N,G,Sq,hd]; k/v_pool [P,ps,N,hd] page pools (page 0 is the
@@ -369,17 +466,23 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
     Stage 1 streams the int8 scout copy for EVERY allocated page (the
     paper's always-read integer pass), pools it into per-page importances
     and derives the keep mask + early head gate (core.hdp.decode_scout).
-    Stage 2 gathers full-precision K/V only for surviving pages — pruned
+    Stage 2 fetches full-precision K/V only for surviving pages — pruned
     pages' gather indices are redirected to the scratch page, so their
     memory is never touched (the TPU kernel analogue never DMAs them).
-    Stage 3 runs the approximate attention QK^T - FQ FK^T on the gathered
+    Stage 3 runs the approximate attention QK^T - FQ FK^T on the fetched
     pages with the keep mask excluded from the softmax.
 
-    ``pallas=True`` routes stage 3 through the
-    ``hdp_block_sparse_attention`` Pallas kernel (interpret mode off-TPU);
-    the default is the pure-jnp stage with identical semantics. Backend
-    selection lives in ``repro.attention`` (``paged_hdp_decode`` /
-    ``pallas_hdp_block``); this function is the shared stage pipeline.
+    ``stage3`` selects the 2+3 implementation (backend selection lives in
+    ``repro.attention``; this function is the shared stage pipeline):
+
+    * ``"xla"`` — contexts up to ``page_chunk`` columns gather kept pages
+      into one contiguous slab (exactly the dense reduction order);
+      longer contexts run an online-softmax scan over page chunks, so
+      stage-2 memory stays O(page_chunk) instead of O(Sk).
+    * ``"pallas_paged"`` — the gather-free FUM kernel: scalar-prefetched
+      page ids index the pool directly (interpret mode off-TPU).
+    * ``"pallas_block"`` — the block-sparse kernel on a densified gather
+      (the pre-kernel route, kept for the conformance matrix).
     """
     B, N, G, Sq, hd = q.shape
     P, ps, _, _ = k_pool.shape
@@ -395,26 +498,28 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
     keep, bvalid, theta, theta_head, head_kept = decode_scout(
         s_int, valid, hdp)
 
-    # ---- stage 2: fetch-upon-mask page gather ----
+    # ---- stage 2: fetch-upon-mask page selection ----
     # page fetch granularity is OR-over-heads (a page holds all kv heads);
     # the per-head keep mask still applies inside the softmax below. Early
     # head-gated heads (output zeroed) don't demand their pages at all.
     fetched = (keep & head_kept[..., None]).any(axis=(1, 2))  # [B, nP]
-    gather_idx = jnp.where(fetched, table, 0)             # pruned -> scratch
-    k = k_pool[gather_idx].reshape(B, Sk, N, hd)
-    v = v_pool[gather_idx].reshape(B, Sk, N, hd)
 
-    # ---- stage 3: approximate attention on surviving pages ----
-    if pallas and window:
-        # the kernel's per-row validity is an upper bound (cols < kv_len)
+    if stage3 != "xla" and window:
+        # the kernels' per-row validity is an upper bound (cols < kv_len)
         # and cannot express the sliding-window lower bound; fall back to
         # the jnp path rather than silently attending out-of-window keys
-        pallas = False
-    if pallas:
+        stage3 = "xla"
+    if stage3 == "pallas_paged":
+        out = _paged_fum_kernel_stage3(qq, k_pool, v_pool, table, keep,
+                                       head_kept, q_pos, hdp=hdp, ps=ps)
+    elif stage3 == "pallas_block":
         from repro.kernels.hdp_block_attn import hdp_block_sparse_attention
         from repro.kernels.ops import _auto_interpret
         from repro.kernels.ref import keep_mask_to_indices
 
+        gather_idx = jnp.where(fetched, table, 0)         # pruned -> scratch
+        k = k_pool[gather_idx].reshape(B, Sk, N, hd)
+        v = v_pool[gather_idx].reshape(B, Sk, N, hd)
         H = N * G
         def per_head(x):  # [B,Sk,N,hd] -> [B,H,Sk,hd]
             xh = jnp.repeat(x.transpose(0, 2, 1, 3), G, axis=1)
@@ -436,10 +541,22 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
             interpret=_auto_interpret(None))
         out = out.reshape(B, N, G, Sq, hd)
     else:
-        kq, _, fk = _fixed_split(k, hdp)
-        out = _approx_block_attention(qq, fq, kq, fk, v, keep, valid,
-                                      head_kept, block_k=ps, scale=scale,
-                                      approx=hdp.approx)
+        gather_idx = jnp.where(fetched, table, 0)         # pruned -> scratch
+        cpp = max(1, page_chunk // ps)                    # pages per chunk
+        if nP <= cpp:
+            # one chunk covers the context: gather kept pages into a slab
+            # and reduce exactly like the dense-layout decode (keeps paged
+            # and dense engines token-identical on short contexts)
+            k = k_pool[gather_idx].reshape(B, Sk, N, hd)
+            v = v_pool[gather_idx].reshape(B, Sk, N, hd)
+            kq, _, fk = _fixed_split(k, hdp)
+            out = _approx_block_attention(qq, fq, kq, fk, v, keep, valid,
+                                          head_kept, block_k=ps, scale=scale,
+                                          approx=hdp.approx)
+        else:
+            out = _paged_scan_attention(qq, fq, k_pool, v_pool, gather_idx,
+                                        keep, valid, head_kept, hdp=hdp,
+                                        ps=ps, cpp=cpp, scale=scale)
 
     stats = None
     if return_stats:

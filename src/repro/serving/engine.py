@@ -29,6 +29,15 @@ cannot be honored — the static fixed-point grid applies to prefill and
 decode alike (the paper's co-processor model). Under that grid, paged
 decode is token-for-token identical to the dense backend.
 
+The decode hot path is **zero-copy and fused**: the serving cache (page
+pool or slot cache) is *donated* to the decode and chunked-prefill jits
+(``jax.jit(..., donate_argnums=...)``), so per-token cache updates alias
+the same buffers instead of allocating a second copy of the pool every
+step, and decode runs a jitted ``lax.scan`` over a configurable horizon
+(``decode_horizon`` / ``REPRO_DECODE_HORIZON``) — one Python dispatch and
+one host sync per H tokens with on-device EOS/budget masking, token-
+identical to per-token stepping.
+
 HDP is active inside both prefill and decode attention when
 ``cfg.hdp.enabled`` — stats (block/head/page sparsity per layer) are
 aggregated into engine metrics so serving examples/benchmarks can report
@@ -43,7 +52,9 @@ release through a deprecation shim.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -62,6 +73,9 @@ I32 = jnp.int32
 #: Families served through the block-paged transformer KV cache.
 PAGEABLE_FAMILIES = ("dense", "moe", "vlm")
 
+#: env var giving the default decode horizon (explicit kwargs win).
+HORIZON_ENV = "REPRO_DECODE_HORIZON"
+
 
 @dataclasses.dataclass
 class Request:
@@ -78,6 +92,9 @@ class Result:
     tokens: List[int]
     prefill_s: float = 0.0
     decode_steps: int = 0
+    #: False when Engine.run exhausted its step budget before this request
+    #: finished (tokens then hold the partial generation so far).
+    complete: bool = True
 
 
 class Engine:
@@ -101,6 +118,14 @@ class Engine:
         ``attn`` via a shim for one release (emits a DeprecationWarning).
     page_size: paged-layout page length; defaults to ``hdp.block_k``
         (must match it while HDP is enabled).
+    decode_horizon: tokens generated per jitted decode call (the fused
+        ``lax.scan`` loop) — one Python dispatch + one host sync per
+        horizon instead of per token. Token-identical to horizon=1:
+        EOS/budget masking runs on device, and the scan length is
+        clamped per call to the longest remaining budget so the loop
+        never runs steps that provably have no active slot. None reads
+        ``REPRO_DECODE_HORIZON`` (default 1). Admission (slot refill)
+        happens at horizon boundaries.
     """
 
     def __init__(self, cfg: ModelConfig, params=None, *, rng=None,
@@ -110,7 +135,8 @@ class Engine:
                  attn: Optional[AttnSpec] = None,
                  cache_backend: Optional[str] = None,
                  attn_backend: Optional[str] = None,
-                 page_size: Optional[int] = None):
+                 page_size: Optional[int] = None,
+                 decode_horizon: Optional[int] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "enc-dec serving uses launch/serve.py --arch whisper path")
@@ -146,6 +172,11 @@ class Engine:
         self.collect_stats = collect_stats
         self.paged = layout == "paged"
         self.attn_spec = spec
+        if decode_horizon is None:
+            decode_horizon = int(os.environ.get(HORIZON_ENV, "1") or 1)
+        if decode_horizon < 1:
+            raise ValueError(f"decode_horizon must be >= 1, got {decode_horizon}")
+        self.horizon = int(decode_horizon)
 
         if params is None:
             rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -163,16 +194,24 @@ class Engine:
         self._queue: List[Request] = []
         self._last_tok = jnp.zeros((max_batch, 1), I32)
         self._pos = jnp.zeros((max_batch,), I32)
-        self.metrics: Dict[str, float] = {
-            "prefill_s": 0.0, "prefill_calls": 0, "decode_s": 0.0,
-            "decode_steps": 0, "tokens_out": 0, "block_sparsity": 0.0,
-            "head_sparsity": 0.0, "page_sparsity": 0.0, "stat_samples": 0,
-            "page_samples": 0}
+        # device-resident per-slot decode state: written at install time,
+        # refreshed from the fused loop's own carry after every horizon —
+        # the steady-state decode step uploads no host arrays at all
+        self._active_dev = jnp.zeros((max_batch,), bool)
+        self._remaining_dev = jnp.zeros((max_batch,), I32)
+        self._eos_dev = jnp.full((max_batch,), -1, I32)
+        self.metrics: Dict[str, float] = self._fresh_metrics()
 
+        # buffer donation: the serving cache (page pool / slot cache) is
+        # aliased in place by the chunked-prefill and decode jits instead
+        # of copied per call; take()/put() on the cache objects keep stale
+        # host handles from being reused after a donating call
         self._prefill_jit = jax.jit(self._prefill_fn, static_argnums=(2,))
-        self._chunk_jit = jax.jit(self._prefill_chunk_fn)
-        self._decode_jit = (jax.jit(self._decode_paged_fn) if self.paged
-                            else jax.jit(self._decode_fn))
+        self._chunk_jit = jax.jit(self._prefill_chunk_fn, donate_argnums=(2,))
+        self._decode_jit = jax.jit(
+            self._decode_loop_paged_fn if self.paged
+            else self._decode_loop_dense_fn,
+            static_argnums=(0,), donate_argnums=(3,))
 
     # ------------------------------------------------------------ jitted fns
     def _prefill_fn(self, params, tokens, bucket_len):
@@ -191,20 +230,62 @@ class Engine:
             attn=self.attn_spec)
         return new_cache, stats
 
-    def _decode_fn(self, params, token, cache, pos):
-        logits, new_cache, stats = registry.apply_decode(
-            self.cfg, params, token, cache, pos[:, None],
-            collect_stats=self.collect_stats, attn=self.attn_spec)
+    def _decode_step(self, params, token, cache, pos, table):
+        if table is not None:
+            logits, new_cache, stats = registry.apply_decode(
+                self.cfg, params, token, cache, pos[:, None],
+                collect_stats=self.collect_stats, page_table=table,
+                attn=self.attn_spec)
+        else:
+            logits, new_cache, stats = registry.apply_decode(
+                self.cfg, params, token, cache, pos[:, None],
+                collect_stats=self.collect_stats, attn=self.attn_spec)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(I32)[:, None]
         return nxt, new_cache, stats
 
-    def _decode_paged_fn(self, params, token, cache, table, pos):
-        logits, new_cache, stats = registry.apply_decode(
-            self.cfg, params, token, cache, pos[:, None],
-            collect_stats=self.collect_stats, page_table=table,
-            attn=self.attn_spec)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(I32)[:, None]
-        return nxt, new_cache, stats
+    def _decode_loop(self, length, params, tok, cache, table, pos, active,
+                     remaining, eos):
+        """``length`` fused decode steps as one jitted lax.scan.
+
+        On-device bookkeeping mirrors the host loop exactly: a slot is
+        done when its budget runs out (``remaining``) or it emits its
+        ``eos`` id (-1 = none); done slots park on token 0 / position 0
+        with their page-table row zeroed, so their writes land in the
+        scratch page. Emitted per step: (token [B], pre-step active mask
+        [B], stats) — the active mask tells the host which emitted
+        tokens are real, keeping horizon-H output token-identical to H=1
+        even when EOS fires mid-horizon. ``length`` is static (the host
+        clamps it to the longest remaining budget, so the scan never
+        runs steps that provably have no active slot; at most
+        ``horizon`` distinct compile entries exist per engine).
+        """
+        def body(carry, _):
+            tok, cache, pos, active, remaining = carry
+            table_eff = (None if table is None
+                         else jnp.where(active[:, None], table, 0))
+            nxt, cache2, stats = self._decode_step(
+                params, tok, cache, pos, table_eff)
+            done = active & ((remaining <= 1)
+                             | ((eos >= 0) & (nxt[:, 0] == eos)))
+            carry = (jnp.where(done[:, None], 0, nxt), cache2,
+                     jnp.where(done, 0, pos + 1), active & ~done,
+                     remaining - active.astype(I32))
+            return carry, (nxt[:, 0], active, stats)
+
+        carry, ys = jax.lax.scan(body, (tok, cache, pos, active, remaining),
+                                 None, length=length)
+        tok, cache, pos, active, remaining = carry
+        return ys, tok, cache, pos, active, remaining
+
+    def _decode_loop_paged_fn(self, length, params, tok, cache, table, pos,
+                              active, remaining, eos):
+        return self._decode_loop(length, params, tok, cache, table, pos,
+                                 active, remaining, eos)
+
+    def _decode_loop_dense_fn(self, length, params, tok, cache, pos, active,
+                              remaining, eos):
+        return self._decode_loop(length, params, tok, cache, None, pos,
+                                 active, remaining, eos)
 
     # --------------------------------------------------------------- public
     def submit(self, req: Request) -> None:
@@ -336,8 +417,25 @@ class Engine:
         self._results[req.uid] = Result(req.uid, plen, [], prefill_s=prefill_s)
         self._last_tok = self._last_tok.at[slot, 0].set(int(req.prompt[-1]))
         self._pos = self._pos.at[slot].set(plen - 1)
+        self._active_dev = self._active_dev.at[slot].set(True)
+        self._remaining_dev = self._remaining_dev.at[slot].set(
+            req.max_new_tokens)
+        self._eos_dev = self._eos_dev.at[slot].set(
+            -1 if req.eos_id is None else req.eos_id)
 
     # -------------------------------------------------------------- metrics
+    @staticmethod
+    def _fresh_metrics() -> Dict[str, float]:
+        return {"prefill_s": 0.0, "prefill_calls": 0, "decode_s": 0.0,
+                "decode_steps": 0, "tokens_out": 0, "block_sparsity": 0.0,
+                "head_sparsity": 0.0, "page_sparsity": 0.0,
+                "stat_samples": 0, "page_samples": 0}
+
+    def reset_metrics(self) -> None:
+        """Zero the aggregated serving metrics (e.g. after a warmup pass,
+        so reported throughput is steady-state rather than compile time)."""
+        self.metrics = self._fresh_metrics()
+
     def _record_stats(self, stats) -> None:
         """Accumulate one AttnStats sample (leaves carry a layer dim)."""
         if not self.collect_stats or stats is None:
@@ -347,12 +445,14 @@ class Engine:
         if bs is None or hs is None:
             return
         m = self.metrics
-        m["block_sparsity"] += float(jnp.mean(bs))
-        m["head_sparsity"] += float(jnp.mean(hs))
+        # np.mean works on device and host leaves alike — the fused decode
+        # loop hands this numpy slices it already fetched in its one sync
+        m["block_sparsity"] += float(np.mean(np.asarray(bs)))
+        m["head_sparsity"] += float(np.mean(np.asarray(hs)))
         if getattr(stats, "page_sparsity", None) is not None:
             # decode-only field: averaged over its own sample count so
             # prefill records don't dilute it
-            m["page_sparsity"] += float(jnp.mean(stats.page_sparsity))
+            m["page_sparsity"] += float(np.mean(np.asarray(stats.page_sparsity)))
             m["page_samples"] += 1
         m["stat_samples"] += 1
 
@@ -362,6 +462,8 @@ class Engine:
         res = self._results[req.uid]
         res.tokens = st["generated"]
         res.decode_steps = len(st["generated"])
+        res.complete = True   # may have been marked incomplete by a prior
+        # budget-exhausted run() whose follow-up call finished the request
         if self.paged:
             self.pages.free(slot)
         else:
@@ -370,50 +472,116 @@ class Engine:
         # decode writes land in the scratch page via its zeroed table row
         self._pos = self._pos.at[slot].set(0)
         self._last_tok = self._last_tok.at[slot, 0].set(0)
+        self._active_dev = self._active_dev.at[slot].set(False)
         self._free.append(slot)
 
     def step(self) -> int:
-        """One engine iteration: admit + one batched decode step.
+        """One engine iteration: admit + one fused decode horizon.
 
-        Returns the number of active slots stepped."""
+        Generates up to ``horizon`` tokens per active slot in a single
+        jitted call (one host sync per horizon); the serving cache is
+        donated to the call, so page-pool updates are in place rather
+        than a fresh copy per step. Returns the number of active slots
+        stepped."""
         self._admit()
         if not self._active:
             return 0
+        n_stepped = len(self._active)
+        # never scan past the longest remaining budget: the tail of the
+        # horizon would provably have no active slot (EOS can still empty
+        # a horizon early — those steps run masked and are not recorded)
+        rem_max = max(st["req"].max_new_tokens - len(st["generated"])
+                      for st in self._active.values())
+        length = min(self.horizon, rem_max)
+
         t0 = time.perf_counter()
-        if self.paged:
-            nxt, new_cache, stats = self._decode_jit(
-                self.params, self._last_tok, self.pages.cache,
-                self.pages.table(), self._pos)
-            self.pages.cache = new_cache
-        else:
-            nxt, new_cache, stats = self._decode_jit(
-                self.params, self._last_tok, self.slots.cache, self._pos)
-            self.slots.cache = new_cache
-        self._record_stats(stats)
-        nxt_np = np.asarray(nxt)
+        store = self.pages if self.paged else self.slots
+        cache = store.take()                       # donated to the jit below
+        try:
+            if self.paged:
+                ys, tok, new_cache, pos, active, remaining = self._decode_jit(
+                    length, self.params, self._last_tok, cache,
+                    self.pages.table(), self._pos, self._active_dev,
+                    self._remaining_dev, self._eos_dev)
+            else:
+                ys, tok, new_cache, pos, active, remaining = self._decode_jit(
+                    length, self.params, self._last_tok, cache, self._pos,
+                    self._active_dev, self._remaining_dev, self._eos_dev)
+        except BaseException:
+            # trace/compile failures leave the donated input untouched —
+            # restore the handle so the engine stays usable and the real
+            # error surfaces instead of a later DonatedCacheError
+            if not any(getattr(x, "is_deleted", lambda: False)()
+                       for x in jax.tree.leaves(cache)):
+                store.put(cache)
+            raise
+        store.put(new_cache)
+        toks_t, act_t, stats_t = ys
+        # the single host sync of the horizon: tokens, active masks and
+        # the (tiny) per-step stats leaves come down in one device_get,
+        # and the decode clock stops after it so the stats transfer is
+        # billed to decode_s exactly like the per-token path did
+        toks_np, act_np, stats_np = jax.device_get((toks_t, act_t, stats_t))
         self.metrics["decode_s"] += time.perf_counter() - t0
-        self.metrics["decode_steps"] += 1
+        any_act = act_np.any(axis=1)
+        ran = int(any_act.sum())                   # steps with any active slot
+        self.metrics["decode_steps"] += ran
+        self._last_tok = tok
+        self._pos = pos
+        self._active_dev = active
+        self._remaining_dev = remaining
+        if self.collect_stats and stats_np is not None:
+            for t in range(ran):
+                self._record_stats(jax.tree.map(lambda x: x[t], stats_np))
 
-        self._pos = self._pos + 1
-        self._last_tok = nxt
-        for slot in list(self._active):
-            st = self._active[slot]
-            req: Request = st["req"]
-            tok = int(nxt_np[slot, 0])
-            st["generated"].append(tok)
-            self.metrics["tokens_out"] += 1
-            done = (len(st["generated"]) >= req.max_new_tokens
-                    or (req.eos_id is not None and tok == req.eos_id))
-            if done:
-                self._finish(slot)
-        return len(nxt_np)
+        for t in range(length):
+            if not any_act[t]:
+                break
+            for slot in list(self._active):
+                if not act_np[t, slot]:
+                    continue
+                st = self._active[slot]
+                req = st["req"]
+                tokn = int(toks_np[t, slot])
+                st["generated"].append(tokn)
+                self.metrics["tokens_out"] += 1
+                done = (len(st["generated"]) >= req.max_new_tokens
+                        or (req.eos_id is not None and tokn == req.eos_id))
+                if done:
+                    self._finish(slot)
+        return n_stepped
 
-    def run(self, max_steps: int = 10_000) -> Dict[int, Result]:
-        """Drive until every submitted request completes."""
+    def run(self, max_steps: int = 10_000, *,
+            strict: bool = False) -> Dict[int, Result]:
+        """Drive until every submitted request completes.
+
+        ``max_steps`` bounds engine iterations (decode horizons, not
+        tokens). If the budget runs out with requests unfinished the
+        affected Results are marked ``complete=False`` — active slots
+        keep their partial tokens, queued requests get an empty Result —
+        and a RuntimeWarning is emitted (or RuntimeError when
+        ``strict=True``; engine state is left intact either way, so a
+        further ``run()`` call can continue).
+        """
         steps = 0
         while (self._queue or self._active) and steps < max_steps:
             self.step()
             steps += 1
+        if self._queue or self._active:
+            msg = (f"Engine.run: step budget {max_steps} exhausted with "
+                   f"{len(self._active)} active and {len(self._queue)} "
+                   f"queued request(s) unfinished")
+            for st in self._active.values():
+                res = self._results[st["req"].uid]
+                res.tokens = list(st["generated"])
+                res.decode_steps = len(res.tokens)
+                res.complete = False
+            for req in self._queue:
+                self._results[req.uid] = Result(
+                    req.uid, len(req.prompt), [], complete=False)
+            if strict:
+                raise RuntimeError(msg)
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return dict(self._results)
 
     def resolved_backend(self, phase: str) -> str:

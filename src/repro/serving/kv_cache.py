@@ -26,6 +26,46 @@ import numpy as np
 from repro.models import registry
 
 
+class DonatedCacheError(RuntimeError):
+    """The live cache handle was donated to a jitted step and not replaced.
+
+    Raised instead of letting XLA hit a deleted buffer: with
+    ``donate_argnums`` the decode step aliases the page pool in place, so
+    the pre-call handle is dead the moment the call is dispatched.
+    Callers must bracket donating calls with ``take()`` / ``put()``.
+    """
+
+
+class _DonatableCache:
+    """Mixin guarding the ``cache`` attribute across buffer donation."""
+
+    _cache: Any = None
+
+    @property
+    def cache(self):
+        if self._cache is None:
+            raise DonatedCacheError(
+                "KV cache handle was donated to a jitted decode step and "
+                "not yet replaced; bracket donating calls with take()/put()")
+        return self._cache
+
+    @cache.setter
+    def cache(self, value) -> None:
+        self._cache = value
+
+    def take(self):
+        """Hand the live cache out for a donating call; the stored handle
+        becomes invalid until ``put`` installs the aliased output."""
+        c = self.cache
+        self._cache = None
+        return c
+
+    def put(self, new_cache) -> None:
+        if self._cache is not None:
+            raise DonatedCacheError("put() without a prior take()")
+        self._cache = new_cache
+
+
 def _batch_axes(cfg) -> Any:
     """Cache-structured tree of the batch-axis index per leaf."""
     specs = registry.cache_specs(cfg)
@@ -39,7 +79,7 @@ def _batch_axes(cfg) -> Any:
                             a is None or isinstance(a, str) for a in x))
 
 
-class SlotCache:
+class SlotCache(_DonatableCache):
     """Slot arithmetic over a family-agnostic cache pytree."""
 
     def __init__(self, cfg, batch: int, max_len: int, **cache_kw):
@@ -110,7 +150,7 @@ def cache_bytes(cache) -> int:
 # --------------------------------------------------------------------------
 # Block-paged KV cache (transformer families)
 # --------------------------------------------------------------------------
-class PagedKVCache:
+class PagedKVCache(_DonatableCache):
     """Page pool + per-slot page tables, aligned to HDP's ``block_k``.
 
     Layout: ``k_pages``/``v_pages`` are [L, P, page_size, N, hd] pools
@@ -162,6 +202,7 @@ class PagedKVCache:
         self._free: List[int] = list(range(1, self.num_pages))
         self._slot_pages: Dict[int, List[int]] = {}
         self._table = np.zeros((batch, self.pages_per_slot), np.int32)
+        self._table_dev: Optional[jnp.ndarray] = None
         self.peak_pages = 0
 
     # ---------------------------------------------------------- host state
@@ -170,7 +211,11 @@ class PagedKVCache:
         return sum(len(p) for p in self._slot_pages.values())
 
     def table(self) -> jnp.ndarray:
-        return jnp.asarray(self._table)
+        """Device copy of the page table, re-uploaded only after
+        alloc/free mutate it (steady-state decode uploads nothing)."""
+        if self._table_dev is None:
+            self._table_dev = jnp.asarray(self._table)
+        return self._table_dev
 
     def alloc(self, slot: int, n_tokens: int) -> List[int]:
         """Reserve pages for `n_tokens` cache positions of `slot`."""
@@ -187,6 +232,7 @@ class PagedKVCache:
         self._slot_pages[slot] = pages
         self._table[slot, :] = 0
         self._table[slot, :need] = pages
+        self._table_dev = None
         self.peak_pages = max(self.peak_pages, self.pages_in_use)
         return pages
 
@@ -195,6 +241,7 @@ class PagedKVCache:
         # hottest pages, which also makes reuse deterministic to test
         self._free[:0] = self._slot_pages.pop(slot, [])
         self._table[slot, :] = 0
+        self._table_dev = None
 
     # -------------------------------------------------------------- insert
     def insert(self, one_cache, slot: int, row: int = 0) -> None:

@@ -132,10 +132,11 @@ def test_backends_agree_with_reference(call):
 
 
 def test_every_backend_covered_by_grid():
-    """Each of the six registered backends runs in >= 1 conformance cell."""
+    """Each of the seven registered backends runs in >= 1 conformance cell."""
     names = {b.name for b in list_backends()}
     assert names == {"reference", "xla_dense", "xla_hdp", "paged_hdp_decode",
-                     "pallas_flash", "pallas_hdp_block"}
+                     "pallas_flash", "pallas_hdp_block",
+                     "pallas_paged_decode"}
     covered = {"reference"}
     for call in GRID:
         covered |= {b.name for b in list_backends() if b.supports(call)}
@@ -182,10 +183,20 @@ def test_auto_resolution_off_tpu(call, expect, no_env):
 
 
 def test_explicit_pallas_and_fallback(no_env):
-    paged = AttnCall(mode="decode", layout="paged", hdp=HDP, per_slot=True)
+    paged = AttnCall(mode="decode", layout="paged",
+                     hdp=HDP.replace(causal=True), per_slot=True)
     spec = AttnSpec(backend="pallas")
-    assert resolve_backend(paged, spec).name == "pallas_hdp_block"
-    # the FUM kernel cannot express a sliding window's lower bound ->
+    # the "pallas" family tag prefers the gather-free page-table-native
+    # kernel; the densifying block kernel stays explicitly addressable
+    assert resolve_backend(paged, spec).name == "pallas_paged_decode"
+    assert resolve_backend(
+        paged, AttnSpec(backend="pallas_hdp_block")).name == "pallas_hdp_block"
+    # non-causal paged calls can't use the gather-free kernel (its per-row
+    # validity is an upper bound) but the block kernel still serves them
+    noncausal = AttnCall(mode="decode", layout="paged", hdp=HDP,
+                         causal=False, per_slot=True)
+    assert resolve_backend(noncausal, spec).name == "pallas_hdp_block"
+    # the FUM kernels cannot express a sliding window's lower bound ->
     # windowed calls fall down the chain to the XLA implementation
     windowed = paged.replace(window=8)
     assert resolve_backend(windowed, spec).name == "paged_hdp_decode"
