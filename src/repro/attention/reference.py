@@ -70,6 +70,17 @@ def _sparsity_stats(keep, bvalid, head_kept):
     return (1.0 - kept / tot, 1.0 - head_kept.astype(F32).mean())
 
 
+def _sparsity_stats_per_slot(keep, bvalid, head_kept):
+    """Decode-mode stats keep the batch dim ([B] leaves), mirroring the
+    production backends, so the serving engine can mask parked slots."""
+    ax = tuple(range(1, keep.ndim))
+    kept = (keep & bvalid).astype(F32).sum(ax)
+    tot = jnp.maximum(
+        jnp.broadcast_to(bvalid, keep.shape).astype(F32).sum(ax), 1.0)
+    hax = tuple(range(1, head_kept.ndim))
+    return (1.0 - kept / tot, 1.0 - head_kept.astype(F32).mean(hax))
+
+
 def _dense_exact(q, k, v, valid):
     scale = 1.0 / (q.shape[-1] ** 0.5)
     s = jnp.einsum("bngqh,bsnh->bngqs", q.astype(F32), k.astype(F32),
@@ -180,13 +191,13 @@ def _hdp_decode(q, k, v, call, q_pos, k_pos, *, ik=None, fixed_grid=False,
 
     stats = None
     if call.needs_stats:
-        bs, hs = _sparsity_stats(keep, bvalid, head_kept)
+        bs, hs = _sparsity_stats_per_slot(keep, bvalid, head_kept)
         page_sp = None
         if page_table is not None:
             fetched = (keep & head_kept[..., None]).any(axis=(1, 2))
-            alloc = jnp.maximum((page_table > 0).astype(F32).sum(), 1.0)
+            alloc = jnp.maximum((page_table > 0).astype(F32).sum(-1), 1.0)
             page_sp = 1.0 - jnp.minimum(
-                (fetched & (page_table > 0)).astype(F32).sum() / alloc, 1.0)
+                (fetched & (page_table > 0)).astype(F32).sum(-1) / alloc, 1.0)
         stats = AttnStats(bs, hs, theta_head=theta_head,
                           page_sparsity=page_sp)
     return out, stats

@@ -60,6 +60,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "loop): one host sync per horizon instead of per "
                          "token, token-identical to 1; default honors "
                          "REPRO_DECODE_HORIZON, else 1")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=None,
+                    help="share prompt-prefix pages across requests through "
+                         "the refcounted radix tree (paged layout); prefill "
+                         "runs only on the unshared suffix. Default honors "
+                         "REPRO_PREFIX_CACHE, else off")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="force prefix caching off (the cold A/B leg)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every synthetic prompt a common random "
+                         "prefix of this many tokens (the prefix-cache "
+                         "benchmark workload); 0 = fully random prompts")
     ap.add_argument("--warmup", action="store_true",
                     help="run one throwaway request through the engine and "
                          "reset metrics before serving, so reported tok/s "
@@ -92,6 +105,7 @@ def run(args) -> dict:
     eng = Engine(cfg, max_batch=args.max_batch, max_len=args.max_len,
                  prefill_buckets=(16, 32, 64),
                  collect_stats=not args.no_hdp, attn=spec,
+                 prefix_cache=args.prefix_cache,
                  decode_horizon=args.decode_horizon)
     if getattr(args, "warmup", False):
         # one throwaway request compiles the prefill/decode jits (same
@@ -101,15 +115,28 @@ def run(args) -> dict:
         eng.run()
         eng._results.pop(-1, None)
         eng.reset_metrics()
+    if args.shared_prefix \
+            and args.max_len - args.max_new - args.shared_prefix < 5:
+        raise SystemExit(
+            f"--shared-prefix {args.shared_prefix} leaves no room for "
+            f"prompt tails: need max_len >= shared_prefix + max_new + 5 "
+            f"(max_len {args.max_len}, max_new {args.max_new})")
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(1, cfg.vocab_size,
+                          size=args.shared_prefix).tolist()
     for uid in range(args.requests):
-        plen = int(rng.integers(4, min(48, args.max_len - args.max_new)))
-        prompt = rng.integers(1, cfg.vocab_size, size=plen).tolist()
+        hi = min(48, args.max_len - args.max_new - args.shared_prefix)
+        plen = int(rng.integers(4, max(hi, 5)))
+        prompt = shared + rng.integers(1, cfg.vocab_size, size=plen).tolist()
         eng.submit(Request(uid, prompt, max_new_tokens=args.max_new))
 
     results = eng.run()
     s = eng.summary()
     done = sum(len(r.tokens) == args.max_new for r in results.values())
+    # order-independent fingerprint of every generated token — the A/B's
+    # byte-identity check (prefix-cache hit vs cold must agree exactly)
+    tokens_fp = hash(tuple(sorted(
+        (u, tuple(r.tokens)) for u, r in results.items()))) & 0xffffffff
     out = {
         "requests": args.requests,
         "completed": done,
@@ -122,12 +149,26 @@ def run(args) -> dict:
         "decode_tok_s": round(s.get("decode_tok_s", 0.0), 2),
         "prefill_s_total": round(s["prefill_s"], 3),
         "prefill_calls": s["prefill_calls"],
+        # tokens run through prefill forwards (padded size) — the
+        # deterministic FLOPs proxy; prefix-cache hits shrink it
+        "prefill_tokens": int(s["prefill_tokens"]),
         "decode_steps": s["decode_steps"],
         "block_sparsity": round(s["block_sparsity"], 4),
         "head_sparsity": round(s["head_sparsity"], 4),
         "page_sparsity": round(s["page_sparsity"], 4),
         "cache_bytes": s["cache_bytes"],
+        "tokens_fp": tokens_fp,
     }
+    if s["cache_backend"] == "paged":
+        out["pages_peak"] = s["pages_peak"]
+        out["pages_in_use"] = s["pages_in_use"]
+        out["prefix_cache"] = s["prefix_cache"]
+        if s["prefix_cache"]:
+            out.update(prefix_hits=s["prefix_hits"],
+                       prefix_hit_tokens=s["prefix_hit_tokens"],
+                       prefix_evictions=s["prefix_evictions"],
+                       pages_cached=s["pages_cached"],
+                       cow_copies=int(s["cow_copies"]))
     log.info("serve summary: %s", out)
     return out
 

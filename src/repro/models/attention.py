@@ -295,12 +295,17 @@ def _approx_block_attention(qq, fq, kq, fk, v, keep, valid, head_kept, *,
 
 
 def _block_sparsity_stats(keep, bvalid, head_kept):
-    """Pruned fractions over *valid* blocks (bvalid broadcast to keep)."""
-    kept = (keep & bvalid).astype(F32).sum()
+    """Per-slot pruned fractions over *valid* blocks — decode-mode stats
+    leaves carry the batch dim ([B]) so the serving engine can mask
+    parked slots out of the batchwise means (prefill stats stay scalar:
+    exact-size stacking means every row is real)."""
+    ax = tuple(range(1, keep.ndim))
+    kept = (keep & bvalid).astype(F32).sum(ax)
     tot = jnp.maximum(
-        jnp.broadcast_to(bvalid, keep.shape).astype(F32).sum(), 1.0)
+        jnp.broadcast_to(bvalid, keep.shape).astype(F32).sum(ax), 1.0)
+    hax = tuple(range(1, head_kept.ndim))
     return {"block_sparsity": 1.0 - kept / tot,
-            "head_sparsity": 1.0 - head_kept.astype(F32).mean()}
+            "head_sparsity": 1.0 - head_kept.astype(F32).mean(hax)}
 
 
 def hdp_decode_attention(q, k, v, *, q_pos, k_pos, hdp: HDPConfig,
@@ -560,10 +565,10 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
 
     stats = None
     if return_stats:
-        alloc = jnp.maximum((table > 0).astype(F32).sum(), 1.0)
+        alloc = jnp.maximum((table > 0).astype(F32).sum(-1), 1.0)   # [B]
         stats = {**_block_sparsity_stats(keep, bvalid, head_kept),
                  "page_sparsity": 1.0 - jnp.minimum(
-                     (fetched & (table > 0)).astype(F32).sum() / alloc, 1.0),
+                     (fetched & (table > 0)).astype(F32).sum(-1) / alloc, 1.0),
                  "theta_head": theta_head}
     return out.astype(q.dtype), stats
 
@@ -602,13 +607,19 @@ def build_attn_call(cfg, *, mode: str, paged: bool = False,
 def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
                enc_out=None, causal: bool = True, static_cache: bool = False,
                collect_stats: bool = False, page_table=None,
+               write_floor=None,
                attn: Optional[AttnSpec] = None) -> Tuple[Any, Any, Any]:
     """Full MHA layer: project, rope, (HDP-)attend, output-project.
 
     mode: train | prefill | decode. cache: {"k","v"} [B,Smax,N,hd] (+ pos
     handled by caller passing `positions`). enc_out: cross-attention keys
     source (whisper decoder prefill); static_cache: attend to the cache
-    as-is without writing (whisper cross-attn at decode). attn: backend
+    as-is without writing (whisper cross-attn at decode). write_floor
+    [B]: per-slot first-owned-page offset into the page table — a paged
+    decode write whose page column sits below the floor would land in a
+    *shared read-only* prefix page and is redirected to the scratch page
+    instead (the prefix cache's immutability fence; the engine's COW
+    keeps the fence un-hit in normal operation). attn: backend
     selection spec (None -> the default spec, which honors the
     REPRO_ATTN_BACKEND env var); the attention maths itself is dispatched
     through ``repro.attention.attention`` on an AttnCall descriptor.
@@ -659,8 +670,13 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
                 "paged cache is a decode-time serving layout"
             ps = cache["k_pages"].shape[1]
             pos0 = positions[:, 0]
-            pidx = jnp.take_along_axis(
-                page_table, (pos0 // ps)[:, None], axis=1)[:, 0]
+            pcol = pos0 // ps
+            pidx = jnp.take_along_axis(page_table, pcol[:, None], axis=1)[:, 0]
+            if write_floor is not None:
+                # shared read-only prefix pages are below the slot's write
+                # floor: never write them, scratch absorbs the (redundant)
+                # update instead
+                pidx = jnp.where(pcol >= write_floor, pidx, 0)
             off = pos0 % ps
             new_cache = {
                 "k_pages": cache["k_pages"].at[pidx, off].set(

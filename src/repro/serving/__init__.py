@@ -1,2 +1,3 @@
+from repro.serving.allocator import PageAllocator, RadixPrefixCache  # noqa: F401
 from repro.serving.engine import Engine, Request, Result  # noqa: F401
-from repro.serving.kv_cache import SlotCache  # noqa: F401
+from repro.serving.kv_cache import PagedKVCache, SlotCache  # noqa: F401

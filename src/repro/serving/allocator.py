@@ -1,0 +1,259 @@
+"""Page ownership for the serving pool: refcounts + radix prefix cache.
+
+`PageAllocator` extracts page *ownership* out of `PagedKVCache`: pages
+are refcounted, so one physical page can back several logical owners —
+a decode slot, another decode slot admitted with the same prompt prefix,
+and the prefix cache itself — and is returned to the free list only when
+the last owner lets go (a "true free"). The NaN-poison debugging contract
+rides on that distinction: a freed-page poison hook fires on true free
+only, never while any owner can still read the page.
+
+`RadixPrefixCache` maps prompt prefixes to immutable full pages through a
+token-chunk radix tree: each node holds exactly one page worth of prompt
+tokens (the chunk tuple is the edge label — the "token hash" is Python's
+tuple hashing in the children dict, with the stored tuple as the
+collision-proof identity) plus the pool page id holding that chunk's
+K/V. A resident node owns one allocator reference; a slot that matches a
+path takes one more per page. Under pool pressure, least-recently-used
+*leaf* nodes whose pages have no slot owners are evicted — interior
+nodes are pinned by construction because a slot that references a child
+page always references every ancestor page too.
+
+Both classes are host-side bookkeeping over integer page ids; device
+arrays (the pools, the tables) stay in `kv_cache.PagedKVCache`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+class PageAllocator:
+    """Refcounted free-list allocator over page ids ``[reserved, num_pages)``.
+
+    Page ids below ``reserved`` (the scratch page) are never handed out.
+    Freed pages return to the FRONT of the free list so the next
+    allocation reuses the hottest pages — which also keeps reuse
+    deterministic to test, matching the pre-refactor `PagedKVCache`
+    behaviour.
+
+    ``on_free(pages)`` is invoked with each batch of truly-freed page ids
+    (refcount reached zero) — the pool wires its NaN-poison debug hook
+    here, so poison can never land on a page that is still shared.
+    """
+
+    def __init__(self, num_pages: int, reserved: int = 1,
+                 on_free: Optional[Callable[[List[int]], None]] = None):
+        if num_pages <= reserved:
+            raise ValueError(
+                f"num_pages {num_pages} must exceed reserved {reserved}")
+        self.num_pages = num_pages
+        self.reserved = reserved
+        self.on_free = on_free
+        self._refs = [0] * num_pages
+        self._free: List[int] = list(range(reserved, num_pages))
+        self._in_use = 0
+
+    # ------------------------------------------------------------- queries
+    @property
+    def capacity(self) -> int:
+        return self.num_pages - self.reserved
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        """Distinct pages with at least one owner (slot or cache)."""
+        return self._in_use
+
+    def refcount(self, page: int) -> int:
+        return self._refs[page]
+
+    # ----------------------------------------------------------- lifecycle
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` pages off the free list, each with refcount 1."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: need {n}, free {len(self._free)}")
+        pages = self._free[:n]
+        del self._free[:n]
+        for p in pages:
+            self._refs[p] = 1
+        self._in_use += n
+        return pages
+
+    def ref(self, pages: Sequence[int]) -> None:
+        """Add one owner to each page (pages must be live)."""
+        for p in pages:
+            if self._refs[p] <= 0:
+                raise ValueError(f"ref of free page {p}")
+            self._refs[p] += 1
+
+    def unref(self, pages: Sequence[int]) -> List[int]:
+        """Drop one owner per page; returns the truly-freed subset.
+
+        Truly-freed pages go to the FRONT of the free list and are
+        reported to ``on_free`` — the only point where poison may land.
+        """
+        freed: List[int] = []
+        for p in pages:
+            r = self._refs[p]
+            if r <= 0:
+                raise ValueError(f"unref of free page {p} (double free?)")
+            self._refs[p] = r - 1
+            if r == 1:
+                freed.append(p)
+        if freed:
+            self._free[:0] = freed
+            self._in_use -= len(freed)
+            if self.on_free is not None:
+                self.on_free(list(freed))
+        return freed
+
+
+class _Node:
+    __slots__ = ("chunk", "page", "children", "parent", "last_use")
+
+    def __init__(self, chunk: Tuple[int, ...], page: int,
+                 parent: "Optional[_Node]"):
+        self.chunk = chunk
+        self.page = page
+        self.children: Dict[Tuple[int, ...], _Node] = {}
+        self.parent = parent
+        self.last_use = 0
+
+
+class RadixPrefixCache:
+    """Token-chunk radix tree: prompt prefix -> immutable full pages.
+
+    ``match`` walks the prompt in page-sized chunks and refs every page
+    on the matched path *for the caller* (the admitting slot), so a
+    matched page can never be evicted before the slot releases it.
+    ``insert`` registers a freshly-prefilled prompt's full pages, taking
+    one cache reference per newly-adopted page; chunks already resident
+    keep their original page (the newcomer's duplicate stays slot-owned
+    and simply is not cached). ``evict`` frees least-recently-used
+    unpinned leaves until enough pages came back.
+    """
+
+    def __init__(self, alloc: PageAllocator, page_size: int):
+        if page_size <= 0:
+            raise ValueError(f"page_size {page_size}")
+        self.alloc = alloc
+        self.page_size = page_size
+        self._root = _Node((), -1, None)
+        self._clock = 0
+        self._nodes = 0
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------- queries
+    @property
+    def cached_pages(self) -> int:
+        return self._nodes
+
+    def _chunks(self, tokens: Sequence[int]):
+        ps = self.page_size
+        for i in range(len(tokens) // ps):
+            yield tuple(tokens[i * ps:(i + 1) * ps])
+
+    # --------------------------------------------------------------- match
+    def match(self, tokens: Sequence[int], align: int = 1) -> List[int]:
+        """Longest cached prefix of ``tokens`` as a list of page ids.
+
+        ``align``: the match is trimmed to a multiple of this many pages
+        (HDP q-block alignment) *before* refs are taken and counters
+        bumped — a match trimmed to nothing is an honest miss. Every
+        returned page carries one fresh reference owned by the caller
+        (release with ``alloc.unref`` when the slot retires). Bumps LRU
+        clocks along the walked path.
+        """
+        self._clock += 1
+        node, pages = self._root, []
+        for chunk in self._chunks(tokens):
+            child = node.children.get(chunk)
+            if child is None:
+                break
+            child.last_use = self._clock
+            pages.append(child.page)
+            node = child
+        pages = pages[:len(pages) - len(pages) % max(align, 1)]
+        if pages:
+            self.alloc.ref(pages)
+            self.hits += 1
+            self.hit_tokens += len(pages) * self.page_size
+        else:
+            self.misses += 1
+        return pages
+
+    # -------------------------------------------------------------- insert
+    def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> int:
+        """Register ``pages`` as the full-page chain spelling ``tokens``.
+
+        ``pages[i]`` must hold the K/V of tokens ``[i*ps, (i+1)*ps)`` and
+        must never be written again by its owner (the engine guarantees
+        this by only registering pages strictly before the decode write
+        frontier). Returns the number of newly-cached pages.
+        """
+        self._clock += 1
+        node, added = self._root, 0
+        for i, chunk in enumerate(self._chunks(tokens)):
+            if i >= len(pages):
+                break
+            child = node.children.get(chunk)
+            if child is None:
+                child = _Node(chunk, pages[i], node)
+                self.alloc.ref([pages[i]])
+                node.children[chunk] = child
+                self._nodes += 1
+                added += 1
+            child.last_use = self._clock
+            node = child
+        return added
+
+    # --------------------------------------------------------------- evict
+    def _evictable_leaves(self) -> List[_Node]:
+        out, stack = [], list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            elif self.alloc.refcount(n.page) == 1:  # cache is the only owner
+                out.append(n)
+        return out
+
+    def evict(self, n_pages: int) -> int:
+        """Free up to ``n_pages`` pages, LRU leaves first.
+
+        A leaf whose page is still slot-referenced (refcount > 1) is
+        pinned; evicting a leaf may expose its parent as the next LRU
+        candidate, so the scan repeats until satisfied or dry.
+        """
+        freed = 0
+        while freed < n_pages:
+            leaves = self._evictable_leaves()
+            if not leaves:
+                break
+            leaves.sort(key=lambda n: n.last_use)
+            for leaf in leaves:
+                leaf.parent.children.pop(leaf.chunk)
+                self.alloc.unref([leaf.page])
+                self._nodes -= 1
+                self.evictions += 1
+                freed += 1
+                if freed >= n_pages:
+                    break
+        return freed
+
+    def clear(self) -> int:
+        """Drop every cached prefix (frees all cache-only pages)."""
+        n = self._nodes
+        while self._nodes:
+            if not self.evict(self._nodes):
+                break
+        return n - self._nodes

@@ -23,6 +23,21 @@ prompts (up to ``max_len``) prefill through the same jit entries.
 Finished slots free their pages and are immediately refillable —
 continuous batching.
 
+With the **prefix cache** enabled (paged layout; ``prefix_cache=`` /
+``REPRO_PREFIX_CACHE``), admission first walks a token-chunk radix tree
+(`allocator.RadixPrefixCache`) for the longest cached prompt prefix:
+matched full pages are *shared* into the slot's page table (refcounted by
+`allocator.PageAllocator` — no copy, no recompute) and only the prompt
+suffix is prefilled, through the same chunked-prefill jit at a position
+offset. A full-prompt hit skips prefill entirely after copy-on-write
+duplicating the one shared page the decode resume will rewrite. Finished
+prompts register their full pages (strictly before the decode write
+frontier) back into the tree; under pool pressure, least-recently-used
+unreferenced cached pages are evicted. Shared pages are read-only by
+construction *and* by enforcement: each slot's first-owned-page offset is
+threaded into the decode jit as a write floor — writes below it land in
+the scratch page.
+
 The paged backend pins ``hdp.calib = "none"``: its scout copy of K is
 quantized at cache-write time, so a data-dependent calibration scale
 cannot be honored — the static fixed-point grid applies to prefill and
@@ -52,6 +67,7 @@ release through a deprecation shim.
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
 import time
 import warnings
@@ -67,6 +83,7 @@ from repro.configs.base import ModelConfig
 from repro.models import registry
 from repro.models.attention import build_attn_call
 from repro.serving import kv_cache
+from repro.serving.allocator import RadixPrefixCache
 
 I32 = jnp.int32
 
@@ -75,6 +92,10 @@ PAGEABLE_FAMILIES = ("dense", "moe", "vlm")
 
 #: env var giving the default decode horizon (explicit kwargs win).
 HORIZON_ENV = "REPRO_DECODE_HORIZON"
+
+#: env var enabling prompt-prefix page sharing when ``prefix_cache=None``
+#: is passed (explicit kwargs win; ignored for layouts that cannot share).
+PREFIX_ENV = "REPRO_PREFIX_CACHE"
 
 
 @dataclasses.dataclass
@@ -118,6 +139,14 @@ class Engine:
         ``attn`` via a shim for one release (emits a DeprecationWarning).
     page_size: paged-layout page length; defaults to ``hdp.block_k``
         (must match it while HDP is enabled).
+    num_pages: page-pool size override (default: one full table per slot
+        plus the scratch page). A larger pool gives evicted-under-
+        pressure prefix pages more room to stay resident.
+    prefix_cache: share prompt-prefix pages across requests through the
+        refcounted radix tree (paged layout only). None reads the
+        ``REPRO_PREFIX_CACHE`` env var and degrades silently when the
+        layout cannot share (dense, non-rope positions, HDP chunk
+        misalignment); passing True explicitly raises instead.
     decode_horizon: tokens generated per jitted decode call (the fused
         ``lax.scan`` loop) — one Python dispatch + one host sync per
         horizon instead of per token. Token-identical to horizon=1:
@@ -136,6 +165,8 @@ class Engine:
                  cache_backend: Optional[str] = None,
                  attn_backend: Optional[str] = None,
                  page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None,
+                 prefix_cache: Optional[bool] = None,
                  decode_horizon: Optional[int] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
@@ -185,9 +216,11 @@ class Engine:
 
         if self.paged:
             self.pages = kv_cache.PagedKVCache(cfg, max_batch, max_len,
-                                               page_size=page_size)
+                                               page_size=page_size,
+                                               num_pages=num_pages)
         else:
             self.slots = kv_cache.SlotCache(cfg, max_batch, max_len)
+        self.prefix = self._build_prefix_cache(prefix_cache)
         self._free = list(range(max_batch))
         self._active: Dict[int, Dict[str, Any]] = {}  # slot -> request state
         self._results: Dict[int, Result] = {}
@@ -200,28 +233,88 @@ class Engine:
         self._active_dev = jnp.zeros((max_batch,), bool)
         self._remaining_dev = jnp.zeros((max_batch,), I32)
         self._eos_dev = jnp.full((max_batch,), -1, I32)
+        # per-slot first-owned-page offset: table entries below it are
+        # shared read-only prefix pages; the decode write path redirects
+        # anything below the floor to the scratch page
+        self._floor_dev = jnp.zeros((max_batch,), I32)
         self.metrics: Dict[str, float] = self._fresh_metrics()
 
         # buffer donation: the serving cache (page pool / slot cache) is
-        # aliased in place by the chunked-prefill and decode jits instead
-        # of copied per call; take()/put() on the cache objects keep stale
-        # host handles from being reused after a donating call
-        self._prefill_jit = jax.jit(self._prefill_fn, static_argnums=(2,))
+        # aliased in place by the batched-prefill, chunked-prefill and
+        # decode jits instead of copied per call; take()/put() on the
+        # cache objects keep stale host handles from being reused after a
+        # donating call. Batched prefill fuses the prompt forward with the
+        # page/slot scatter in one donated jit, so no undonated O(pool)
+        # insert copy remains on the admission path.
+        self._prefill_jit = jax.jit(
+            self._prefill_paged_fn if self.paged else self._prefill_dense_fn,
+            static_argnums=(2,), donate_argnums=(3,))
         self._chunk_jit = jax.jit(self._prefill_chunk_fn, donate_argnums=(2,))
         self._decode_jit = jax.jit(
             self._decode_loop_paged_fn if self.paged
             else self._decode_loop_dense_fn,
             static_argnums=(0,), donate_argnums=(3,))
 
+    # ------------------------------------------------------------ prefix cache
+    def _build_prefix_cache(self, requested) -> Optional[RadixPrefixCache]:
+        capable = self.paged and self._can_chunk
+        if requested is None:
+            env = os.environ.get(PREFIX_ENV, "")
+            requested = env.lower() in ("1", "true", "on") if env else False
+            requested = requested and capable   # env default degrades
+        if not requested:
+            return None
+        if not self.paged:
+            raise ValueError(
+                "prefix_cache=True requires the paged cache layout "
+                "(AttnSpec(layout='paged'))")
+        if not self._can_chunk:
+            raise ValueError(
+                "prefix_cache=True needs offset-capable prefill (rope "
+                "positions, HDP chunk boundaries on block_q) — this config "
+                "cannot prefill a prompt suffix in isolation")
+        return RadixPrefixCache(self.pages.allocator, self.pages.page_size)
+
+    @property
+    def _page_align(self) -> int:
+        """Pages per shareable unit: a match boundary must sit on an HDP
+        q-block boundary or the suffix scout would pool across it."""
+        hdp = self.cfg.hdp
+        if hdp is not None and hdp.enabled:
+            return math.lcm(self.pages.page_size, hdp.block_q) \
+                // self.pages.page_size
+        return 1
+
     # ------------------------------------------------------------ jitted fns
-    def _prefill_fn(self, params, tokens, bucket_len):
+    def _prefill_body(self, params, tokens, bucket_len):
         cache = registry.init_cache(self.cfg, tokens.shape[0],
                                     max_len=bucket_len)
         batch = {"tokens": tokens}
-        logits, new_cache, stats = registry.apply_prefill(
+        _, new_cache, stats = registry.apply_prefill(
             self.cfg, params, batch, cache,
             collect_stats=self.collect_stats, attn=self.attn_spec)
-        return logits, new_cache, stats
+        return new_cache, stats
+
+    def _prefill_paged_fn(self, params, tokens, bucket_len, pool, page_idx):
+        """Batched prefill fused with the page scatter, pool donated.
+
+        ``page_idx`` [nb, pages_per_slot]: destination pool page per
+        request-cache page (0-padded — the scratch page absorbs bucket
+        padding, exactly as in `PagedKVCache.insert`)."""
+        one_cache, stats = self._prefill_body(params, tokens, bucket_len)
+        for r in range(tokens.shape[0]):
+            pool = self.pages._insert_fn(pool, one_cache["k"],
+                                         one_cache["v"], page_idx[r], r)
+        return pool, stats
+
+    def _prefill_dense_fn(self, params, tokens, bucket_len, slot_cache, slots):
+        """Batched prefill fused with the slot insert, slot cache donated."""
+        one_cache, stats = self._prefill_body(params, tokens, bucket_len)
+        for r in range(tokens.shape[0]):
+            slot_cache = kv_cache.insert_slot(slot_cache, one_cache,
+                                              slots[r], self.slots.axes,
+                                              row=r)
+        return slot_cache, stats
 
     def _prefill_chunk_fn(self, params, tokens, cache, offset):
         _, new_cache, stats = registry.apply_prefill(
@@ -230,12 +323,12 @@ class Engine:
             attn=self.attn_spec)
         return new_cache, stats
 
-    def _decode_step(self, params, token, cache, pos, table):
+    def _decode_step(self, params, token, cache, pos, table, floors=None):
         if table is not None:
             logits, new_cache, stats = registry.apply_decode(
                 self.cfg, params, token, cache, pos[:, None],
                 collect_stats=self.collect_stats, page_table=table,
-                attn=self.attn_spec)
+                write_floor=floors, attn=self.attn_spec)
         else:
             logits, new_cache, stats = registry.apply_decode(
                 self.cfg, params, token, cache, pos[:, None],
@@ -243,8 +336,8 @@ class Engine:
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(I32)[:, None]
         return nxt, new_cache, stats
 
-    def _decode_loop(self, length, params, tok, cache, table, pos, active,
-                     remaining, eos):
+    def _decode_loop(self, length, params, tok, cache, table, floors, pos,
+                     active, remaining, eos):
         """``length`` fused decode steps as one jitted lax.scan.
 
         On-device bookkeeping mirrors the host loop exactly: a slot is
@@ -264,7 +357,7 @@ class Engine:
             table_eff = (None if table is None
                          else jnp.where(active[:, None], table, 0))
             nxt, cache2, stats = self._decode_step(
-                params, tok, cache, pos, table_eff)
+                params, tok, cache, pos, table_eff, floors)
             done = active & ((remaining <= 1)
                              | ((eos >= 0) & (nxt[:, 0] == eos)))
             carry = (jnp.where(done[:, None], 0, nxt), cache2,
@@ -277,15 +370,15 @@ class Engine:
         tok, cache, pos, active, remaining = carry
         return ys, tok, cache, pos, active, remaining
 
-    def _decode_loop_paged_fn(self, length, params, tok, cache, table, pos,
-                              active, remaining, eos):
-        return self._decode_loop(length, params, tok, cache, table, pos,
-                                 active, remaining, eos)
+    def _decode_loop_paged_fn(self, length, params, tok, cache, table,
+                              floors, pos, active, remaining, eos):
+        return self._decode_loop(length, params, tok, cache, table, floors,
+                                 pos, active, remaining, eos)
 
     def _decode_loop_dense_fn(self, length, params, tok, cache, pos, active,
                               remaining, eos):
-        return self._decode_loop(length, params, tok, cache, None, pos,
-                                 active, remaining, eos)
+        return self._decode_loop(length, params, tok, cache, None, None,
+                                 pos, active, remaining, eos)
 
     # --------------------------------------------------------------- public
     def submit(self, req: Request) -> None:
@@ -327,21 +420,140 @@ class Engine:
         take = [self._queue.pop(0) for _ in range(n)]
         groups: Dict[int, List[Request]] = {}
         long_reqs: List[Request] = []
+        hits: List = []
         for req in take:
             plen = len(req.prompt)
             if self._can_chunk and plen > self.buckets[-1]:
+                # long prompts prefill one at a time — defer their prefix
+                # match so they can hit pages registered by *this* wave's
+                # earlier requests (the shared-prompt burst case)
                 long_reqs.append(req)
+                continue
+            shared = self._prefix_match(req) if self.prefix is not None \
+                else None
+            if shared:
+                hits.append((req, shared))
             else:
                 groups.setdefault(self._bucket_for(plen), []).append(req)
+        jobs = []
         for bucket in sorted(groups):
             reqs = groups[bucket]
             for i in range(0, len(reqs), self.max_batch):
-                self._prefill_group(bucket, reqs[i:i + self.max_batch])
-        for req in long_reqs:
-            self._prefill_long(req)
+                jobs.append((bucket, reqs[i:i + self.max_batch]))
+        # every work item is popped BEFORE it runs: a failing item unwinds
+        # itself (requeue + ref release), the except arm below unwinds
+        # only the never-started remainder — nothing is dropped, no match
+        # ref is released twice
+        try:
+            while jobs:
+                bucket, chunk = jobs.pop(0)
+                self._prefill_group(bucket, chunk)
+            while hits:
+                req, shared = hits.pop(0)
+                self._serve_hit(req, shared)
+            while long_reqs:
+                req = long_reqs.pop(0)
+                shared = self._prefix_match(req) if self.prefix is not None \
+                    else None
+                if shared:
+                    self._serve_hit(req, shared)
+                else:
+                    self._serve_cold(req)
+        except BaseException:
+            for _, chunk in jobs:
+                self._queue[:0] = chunk
+            for req, shared in hits:
+                self.pages.allocator.unref(shared)
+                self._queue.append(req)
+            self._queue.extend(long_reqs)
+            raise
+
+    def _serve_hit(self, req: Request, shared: List[int]) -> None:
+        """Serve a prefix-cache hit, unwinding cleanly on failure.
+
+        Page reservation (the realistic failure: pool exhausted) happens
+        up front. A reservation failure falls back to *cold* serving:
+        the hit's own match refs can pin every evictable cached page, so
+        releasing them and prefilling from scratch (which may now evict
+        them) can succeed where the hit cannot — sharing is an
+        optimization, never a reason to fail a request the cold path
+        could serve. Any later pre-assignment failure releases the match
+        refs and the reserved pages and requeues the request; once the
+        slot owns the pages (``assigned``), slot teardown covers them."""
+        full = len(shared) * self.pages.page_size == len(req.prompt)
+        need = self._pages_for(req) - len(shared) + (1 if full else 0)
+        try:
+            fresh = self._reserve(need)
+        except RuntimeError:
+            self.pages.allocator.unref(shared)
+            self._serve_cold(req)
+            return
+        except BaseException:
+            self.pages.allocator.unref(shared)
+            self._queue.append(req)
+            raise
+        slot = self._free.pop(0)
+        assigned = []
+        try:
+            if full:
+                self._install_hit(req, shared, fresh, slot, assigned)
+            else:
+                self._prefill_suffix(req, shared, fresh, slot, assigned)
+        except BaseException:
+            if not assigned:
+                self.pages.allocator.unref(shared + fresh)
+                self._free.insert(0, slot)
+                self._queue.append(req)
+            elif req.uid not in self._results:
+                # assigned but never activated: tear the slot down so
+                # neither it nor its pages leak outside _active's reach
+                self.pages.free(slot)
+                self._free.insert(0, slot)
+                self._queue.append(req)
+            raise
+
+    def _serve_cold(self, req: Request) -> None:
+        """Prefill a request from scratch (no page sharing)."""
+        plen = len(req.prompt)
+        if self._can_chunk and plen > self.buckets[-1]:
+            try:
+                self._prefill_long(req)
+            except BaseException:
+                self._queue.append(req)
+                raise
+        else:
+            self._prefill_group(self._bucket_for(plen), [req])
+
+    def _prefix_match(self, req: Request) -> Optional[List[int]]:
+        """Longest usable cached prefix of the prompt, as ref'd pages
+        (page-granular, trimmed to HDP q-block alignment in the tree)."""
+        return self.prefix.match(req.prompt, align=self._page_align) or None
+
+    def _reserve(self, need: int) -> List[int]:
+        """Allocate fresh pages, evicting LRU cached prefixes on pressure."""
+        short = need - self.pages.allocator.available
+        if short > 0 and self.prefix is not None:
+            self.prefix.evict(short)
+        return self.pages.allocator.alloc(need)
+
+    def _pages_for(self, req: Request) -> int:
+        return max(1, -(-(len(req.prompt) + req.max_new_tokens)
+                        // self.pages.page_size))
+
+    def _register_prefix(self, req: Request, slot: int) -> None:
+        """Cache the slot's full prompt pages for future prefix hits.
+
+        Only pages strictly before the decode write frontier (the resume
+        rewrite at ``plen - 1``) are registered — a registered page is
+        immutable from this moment on."""
+        n_reg = (len(req.prompt) - 1) // self.pages.page_size
+        if n_reg > 0:
+            self.prefix.insert(req.prompt[:n_reg * self.pages.page_size],
+                               self.pages.slot_pages(slot)[:n_reg])
 
     def _prefill_group(self, bucket: int, reqs: List[Request]) -> None:
-        """One jitted prefill over same-bucket requests, stacked.
+        """One jitted prefill over same-bucket requests, stacked, fused
+        with the cache scatter (the pool / slot cache is donated to it).
 
         The batch is stacked at exact size: the jit cache stays bounded by
         max_batch entries per bucket, and no duplicated padding row skews
@@ -355,21 +567,73 @@ class Engine:
             # causally invisible to real rows and overwritten during
             # decode before they are ever attended)
             toks[r, plen:] = toks[r, plen - 1]
+        slots = [self._free.pop(0) for _ in reqs]
+        if self.paged:
+            page_idx = np.zeros((nb, self.pages.pages_per_slot), np.int32)
+            try:
+                for r, (req, slot) in enumerate(zip(reqs, slots)):
+                    pages = self._reserve(self._pages_for(req))
+                    self.pages.assign(slot, pages)
+                    page_idx[r, :len(pages)] = pages
+            except BaseException:
+                # pool exhausted mid-group: release what was assigned and
+                # put slots + requests back — nothing leaks, nothing drops
+                for slot in slots:
+                    self.pages.free(slot)
+                self._free[:0] = slots
+                self._queue[:0] = reqs
+                raise
+            store, scatter = self.pages, jnp.asarray(page_idx)
+        else:
+            store, scatter = self.slots, jnp.asarray(slots, I32)
         t0 = time.perf_counter()
-        _, one_cache, stats = self._prefill_jit(
-            self.params, jnp.asarray(toks), bucket)
+        cache = store.take()                       # donated to the jit below
+        try:
+            new_cache, stats = self._prefill_jit(
+                self.params, jnp.asarray(toks), bucket, cache, scatter)
+        except BaseException:
+            store.restore_if_undonated(cache)
+            for slot in slots:                     # roll admission back
+                if self.paged:
+                    self.pages.free(slot)
+            self._free[:0] = slots
+            self._queue[:0] = reqs
+            raise
+        store.put(new_cache)
         self._record_stats(stats)
         dt = time.perf_counter() - t0
         self.metrics["prefill_s"] += dt
         self.metrics["prefill_calls"] += 1
-        for r, req in enumerate(reqs):
-            self._install(req, one_cache, r, dt / nb)
+        # padded forward size — the prefill-FLOPs proxy the prefix-cache
+        # A/B asserts on (wall time is too load-sensitive for CI)
+        self.metrics["prefill_tokens"] += nb * bucket
+        for r, (req, slot) in enumerate(zip(reqs, slots)):
+            self._activate(req, slot, dt / nb)
+            if self.prefix is not None:
+                self._register_prefix(req, slot)
 
     def _tail_len(self, rem: int, off: int) -> int:
         for b in self.buckets:
             if b >= rem and off + b <= self.max_len:
                 return b
         return rem  # exact-length fallback (one compile per distinct rem)
+
+    def _chunk_loop(self, prompt: np.ndarray, cache, off: int):
+        """Drive `_chunk_jit` from position `off` to the end of `prompt`."""
+        plen = len(prompt)
+        chunk = self.buckets[-1]
+        while off < plen:
+            rem = plen - off
+            clen = chunk if rem >= chunk else self._tail_len(rem, off)
+            piece = np.full((1, clen), prompt[plen - 1], np.int32)
+            piece[0, :min(rem, clen)] = prompt[off:off + clen]
+            cache, stats = self._chunk_jit(
+                self.params, jnp.asarray(piece), cache,
+                jnp.asarray(off, I32))
+            self._record_stats(stats)
+            self.metrics["prefill_tokens"] += clen
+            off += clen
+        return cache
 
     def _prefill_long(self, req: Request) -> None:
         """Chunked prefill: bucket-sized chunks appended at a pos offset.
@@ -380,39 +644,89 @@ class Engine:
         registered configs serve with tau_h = 0, where the paths are
         token-identical — pinned in tests/test_paged_cache.py)."""
         prompt = np.asarray(req.prompt, np.int32)
-        plen = len(prompt)
-        chunk = self.buckets[-1]
         t0 = time.perf_counter()
         cache = registry.init_cache(self.cfg, 1, max_len=self.max_len)
-        off = 0
-        while off < plen:
-            rem = plen - off
-            clen = chunk if rem >= chunk else self._tail_len(rem, off)
-            piece = np.full((1, clen), prompt[plen - 1], np.int32)
-            piece[0, :min(rem, clen)] = prompt[off:off + clen]
-            cache, stats = self._chunk_jit(
-                self.params, jnp.asarray(piece), cache,
-                jnp.asarray(off, I32))
-            self._record_stats(stats)
-            off += clen
+        cache = self._chunk_loop(prompt, cache, 0)
         dt = time.perf_counter() - t0
         self.metrics["prefill_s"] += dt
         self.metrics["prefill_calls"] += 1
         self._install(req, cache, 0, dt)
 
+    def _prefill_suffix(self, req: Request, shared: List[int],
+                        fresh: List[int], slot: int,
+                        assigned: List[int]) -> None:
+        """Prefix-cache hit: share the matched pages, prefill the suffix.
+
+        The request cache is seeded with the shared pages' K/V (a gather,
+        no recompute), the suffix runs through the same chunked-prefill
+        jit at offset ``m``, and only suffix/generation pages are fresh —
+        the shared span of the insert scatter is scratch-redirected."""
+        m = len(shared) * self.pages.page_size
+        prompt = np.asarray(req.prompt, np.int32)
+        t0 = time.perf_counter()
+        cache = self.pages.gather_prefix(shared)
+        cache = self._chunk_loop(prompt, cache, m)
+        dt = time.perf_counter() - t0
+        self.metrics["prefill_s"] += dt
+        self.metrics["prefill_calls"] += 1
+        self.pages.assign(slot, shared + fresh, first_owned=len(shared))
+        assigned.append(slot)              # slot owns every page from here
+        self.pages.insert(cache, slot, 0, first_page=len(shared))
+        self._activate(req, slot, dt, floor=len(shared))
+        self._register_prefix(req, slot)
+
+    def _install_hit(self, req: Request, shared: List[int],
+                     fresh: List[int], slot: int,
+                     assigned: List[int]) -> None:
+        """Full-prompt hit: no prefill at all — every prompt page is
+        already resident. The decode resume rewrites the last prompt
+        position, which sits in the final shared page: that page is
+        copy-on-write duplicated into a slot-owned page first, so the
+        shared original stays immutable for its other readers."""
+        self.pages.cow(shared[-1], fresh[0])
+        self.metrics["cow_copies"] += 1
+        pages = shared[:-1] + [fresh[0]] + fresh[1:]
+        self.pages.assign(slot, pages, first_owned=len(shared) - 1)
+        assigned.append(slot)              # slot owns every page from here
+        self.pages.allocator.unref([shared[-1]])   # COW'd out of the slot
+        self._activate(req, slot, 0.0, floor=len(shared) - 1)
+
     def _install(self, req: Request, one_cache, row: int,
                  prefill_s: float) -> None:
-        slot = self._free.pop(0)
-        plen = len(req.prompt)
         if self.paged:
-            self.pages.alloc(slot, plen + req.max_new_tokens)
-            self.pages.insert(one_cache, slot, row)
-        else:
-            self.slots.insert(one_cache, slot, row)
-        # uniform resume: the first decode step replays the last prompt
-        # token at its own position (its K/V rewrite is idempotent) and
-        # yields the first generated token — identical for aligned and
-        # bucket-padded prompts.
+            pages = self._reserve(self._pages_for(req))  # fallible: first
+        slot = self._free.pop(0)
+        try:
+            if self.paged:
+                self.pages.assign(slot, pages)
+                self.pages.insert(one_cache, slot, row)
+            else:
+                self.slots.insert(one_cache, slot, row)
+            self._activate(req, slot, prefill_s)
+        except BaseException:
+            # roll the slot back (requeueing is the caller's job): pages
+            # return via the slot if assigned, directly otherwise
+            if self.paged:
+                if self.pages.slot_pages(slot):
+                    self.pages.free(slot)
+                else:
+                    self.pages.allocator.unref(pages)
+            self._active.pop(slot, None)
+            self._free.insert(0, slot)
+            raise
+        if self.paged and self.prefix is not None:
+            self._register_prefix(req, slot)
+
+    def _activate(self, req: Request, slot: int, prefill_s: float,
+                  floor: int = 0) -> None:
+        """Arm a slot's host + device decode state for an installed request.
+
+        Uniform resume: the first decode step replays the last prompt
+        token at its own position (its K/V rewrite is idempotent, and
+        lands in a slot-owned page — `floor` fences the shared prefix)
+        and yields the first generated token — identical for aligned,
+        bucket-padded and prefix-shared prompts."""
+        plen = len(req.prompt)
         self._active[slot] = {"req": req, "generated": []}
         self._results[req.uid] = Result(req.uid, plen, [], prefill_s=prefill_s)
         self._last_tok = self._last_tok.at[slot, 0].set(int(req.prompt[-1]))
@@ -422,23 +736,41 @@ class Engine:
             req.max_new_tokens)
         self._eos_dev = self._eos_dev.at[slot].set(
             -1 if req.eos_id is None else req.eos_id)
+        self._floor_dev = self._floor_dev.at[slot].set(floor)
 
     # -------------------------------------------------------------- metrics
     @staticmethod
     def _fresh_metrics() -> Dict[str, float]:
-        return {"prefill_s": 0.0, "prefill_calls": 0, "decode_s": 0.0,
-                "decode_steps": 0, "tokens_out": 0, "block_sparsity": 0.0,
-                "head_sparsity": 0.0, "page_sparsity": 0.0,
-                "stat_samples": 0, "page_samples": 0}
+        return {"prefill_s": 0.0, "prefill_calls": 0, "prefill_tokens": 0,
+                "decode_s": 0.0, "decode_steps": 0, "tokens_out": 0,
+                "block_sparsity": 0.0, "head_sparsity": 0.0,
+                "page_sparsity": 0.0, "stat_samples": 0, "page_samples": 0,
+                "cow_copies": 0}
 
     def reset_metrics(self) -> None:
         """Zero the aggregated serving metrics (e.g. after a warmup pass,
         so reported throughput is steady-state rather than compile time)."""
         self.metrics = self._fresh_metrics()
 
-    def _record_stats(self, stats) -> None:
-        """Accumulate one AttnStats sample (leaves carry a layer dim)."""
+    @staticmethod
+    def _masked_mean(x, mask) -> float:
+        """Mean over real samples: per-slot decode leaves are [L, B] and
+        the active mask drops parked slots; prefill leaves ([L] scalars
+        per layer, exact-size stacking — every row real) pass through."""
+        x = np.asarray(x)
+        if mask is not None and x.ndim >= 2 and x.shape[-1] == len(mask):
+            x = x[..., mask]
+        return float(np.mean(x))
+
+    def _record_stats(self, stats, mask=None) -> None:
+        """Accumulate one AttnStats sample (leaves carry a layer dim).
+
+        ``mask`` [B] bool selects the slots that really decoded this
+        step — parked slots run masked inside the fused loop and must
+        not dilute the batchwise sparsity means."""
         if not self.collect_stats or stats is None:
+            return
+        if mask is not None and not mask.any():
             return
         bs = getattr(stats, "block_sparsity", None)
         hs = getattr(stats, "head_sparsity", None)
@@ -447,12 +779,12 @@ class Engine:
         m = self.metrics
         # np.mean works on device and host leaves alike — the fused decode
         # loop hands this numpy slices it already fetched in its one sync
-        m["block_sparsity"] += float(np.mean(np.asarray(bs)))
-        m["head_sparsity"] += float(np.mean(np.asarray(hs)))
+        m["block_sparsity"] += self._masked_mean(bs, mask)
+        m["head_sparsity"] += self._masked_mean(hs, mask)
         if getattr(stats, "page_sparsity", None) is not None:
             # decode-only field: averaged over its own sample count so
             # prefill records don't dilute it
-            m["page_sparsity"] += float(np.mean(np.asarray(stats.page_sparsity)))
+            m["page_sparsity"] += self._masked_mean(stats.page_sparsity, mask)
             m["page_samples"] += 1
         m["stat_samples"] += 1
 
@@ -465,6 +797,8 @@ class Engine:
         res.complete = True   # may have been marked incomplete by a prior
         # budget-exhausted run() whose follow-up call finished the request
         if self.paged:
+            # unref, not free: pages the prefix cache still holds (and
+            # pages shared into other live slots) survive the slot
             self.pages.free(slot)
         else:
             self.slots.clear(slot)
@@ -473,6 +807,7 @@ class Engine:
         self._pos = self._pos.at[slot].set(0)
         self._last_tok = self._last_tok.at[slot, 0].set(0)
         self._active_dev = self._active_dev.at[slot].set(False)
+        self._floor_dev = self._floor_dev.at[slot].set(0)
         self._free.append(slot)
 
     def step(self) -> int:
@@ -501,8 +836,8 @@ class Engine:
             if self.paged:
                 ys, tok, new_cache, pos, active, remaining = self._decode_jit(
                     length, self.params, self._last_tok, cache,
-                    self.pages.table(), self._pos, self._active_dev,
-                    self._remaining_dev, self._eos_dev)
+                    self.pages.table(), self._floor_dev, self._pos,
+                    self._active_dev, self._remaining_dev, self._eos_dev)
             else:
                 ys, tok, new_cache, pos, active, remaining = self._decode_jit(
                     length, self.params, self._last_tok, cache, self._pos,
@@ -511,9 +846,7 @@ class Engine:
             # trace/compile failures leave the donated input untouched —
             # restore the handle so the engine stays usable and the real
             # error surfaces instead of a later DonatedCacheError
-            if not any(getattr(x, "is_deleted", lambda: False)()
-                       for x in jax.tree.leaves(cache)):
-                store.put(cache)
+            store.restore_if_undonated(cache)
             raise
         store.put(new_cache)
         toks_t, act_t, stats_t = ys
@@ -532,7 +865,8 @@ class Engine:
         self._remaining_dev = remaining
         if self.collect_stats and stats_np is not None:
             for t in range(ran):
-                self._record_stats(jax.tree.map(lambda x: x[t], stats_np))
+                self._record_stats(jax.tree.map(lambda x: x[t], stats_np),
+                                   mask=act_np[t])
 
         for t in range(length):
             if not any_act[t]:
@@ -617,11 +951,20 @@ class Engine:
         if self.paged:
             # resident bytes at the allocation high-water mark — what a
             # demand-sized pool must hold (the pool itself is max-sized
-            # here for static shapes)
+            # here for static shapes). With the prefix cache on, the peak
+            # counts shared pages ONCE — the whole point of sharing.
             m["cache_bytes"] = self.pages.active_bytes(self.pages.peak_pages)
             m["cache_bytes_pool"] = self.pages.pool_bytes()
             m["pages_peak"] = self.pages.peak_pages
+            m["pages_in_use"] = self.pages.pages_in_use
             m["page_size"] = self.pages.page_size
+            m["prefix_cache"] = self.prefix is not None
+            if self.prefix is not None:
+                m["prefix_hits"] = self.prefix.hits
+                m["prefix_misses"] = self.prefix.misses
+                m["prefix_hit_tokens"] = self.prefix.hit_tokens
+                m["prefix_evictions"] = self.prefix.evictions
+                m["pages_cached"] = self.prefix.cached_pages
         else:
             m["cache_bytes"] = kv_cache.cache_bytes(self.slots.cache)
         return m

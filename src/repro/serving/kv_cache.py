@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import registry
+from repro.serving.allocator import PageAllocator
 
 
 class DonatedCacheError(RuntimeError):
@@ -65,6 +66,26 @@ class _DonatableCache:
             raise DonatedCacheError("put() without a prior take()")
         self._cache = new_cache
 
+    def restore_if_undonated(self, cache) -> None:
+        """After a failed donating call: re-install the handle unless XLA
+        actually consumed (deleted) the donated buffers — the one place
+        the donation-detection heuristic lives."""
+        if not any(getattr(x, "is_deleted", lambda: False)()
+                   for x in jax.tree.leaves(cache)):
+            self.put(cache)
+
+    def _donating(self, fn, *args):
+        """Run a cache-donating jit with take()/put() bracketing; on a
+        trace/compile failure the untouched handle is restored so the
+        real error surfaces instead of a later DonatedCacheError."""
+        c = self.take()
+        try:
+            new = fn(c, *args)
+        except BaseException:
+            self.restore_if_undonated(c)
+            raise
+        self.put(new)
+
 
 def _batch_axes(cfg) -> Any:
     """Cache-structured tree of the batch-axis index per leaf."""
@@ -80,7 +101,13 @@ def _batch_axes(cfg) -> Any:
 
 
 class SlotCache(_DonatableCache):
-    """Slot arithmetic over a family-agnostic cache pytree."""
+    """Slot arithmetic over a family-agnostic cache pytree.
+
+    ``insert``/``clear`` run through donated jits: the serving cache is
+    aliased in place instead of re-materialized per call (the same
+    zero-copy contract the decode loop has; stale handles raise
+    ``DonatedCacheError`` through ``take()``/``put()``).
+    """
 
     def __init__(self, cfg, batch: int, max_len: int, **cache_kw):
         self.cfg = cfg
@@ -89,15 +116,22 @@ class SlotCache(_DonatableCache):
         self.cache = registry.init_cache(cfg, batch, max_len=max_len,
                                          **cache_kw)
         self.axes = _batch_axes(cfg)
+        self._ins_jit = jax.jit(
+            lambda c, one, slot, row: insert_slot(c, one, slot, self.axes,
+                                                  row=row),
+            donate_argnums=(0,))
+        self._clr_jit = jax.jit(
+            lambda c, slot: clear_slot(c, slot, self.axes),
+            donate_argnums=(0,))
 
     # ------------------------------------------------------------- insert
     def insert(self, one_cache, slot, row: int = 0) -> None:
-        """Copy row `row` of a request cache into `slot` (in place on host)."""
-        self.cache = insert_slot(self.cache, one_cache, slot, self.axes,
-                                 row=row)
+        """Copy row `row` of a request cache into `slot` (donated, in place)."""
+        self._donating(self._ins_jit, one_cache,
+                       jnp.asarray(slot, jnp.int32), jnp.asarray(row, jnp.int32))
 
     def clear(self, slot) -> None:
-        self.cache = clear_slot(self.cache, slot, self.axes)
+        self._donating(self._clr_jit, jnp.asarray(slot, jnp.int32))
 
 
 def _dus_axis(big, small, slot, axis: int, row: int = 0):
@@ -165,13 +199,31 @@ class PagedKVCache(_DonatableCache):
     inactive slots' decode writes are redirected there, so its contents
     are arbitrary-but-finite and, by construction, always masked.
 
+    Page *ownership* lives in ``self.allocator`` (a refcounted
+    `allocator.PageAllocator`): one physical page can back several slots
+    plus the prefix cache, and returns to the free list only on its last
+    ``unref``. ``assign`` installs an externally-built page list (shared
+    prefix pages + owned pages) into a slot's table row; ``alloc`` is the
+    allocate-fresh-and-assign convenience the non-sharing paths use.
+
     Pages are allocated per request for ``prompt + max_new`` tokens (not
     ``max_len``), which is where the serving-memory win over the dense
-    per-slot layout comes from; ``active_bytes`` tracks it.
+    per-slot layout comes from; ``active_bytes`` tracks it. All pool
+    mutations (``insert``, ``cow``) run through donated jits — the pool
+    is aliased in place, never copied per call.
+
+    ``poison_freed`` (debug): NaN-poison a page's full-precision K on
+    *true free only* — a stale unmasked read of a freed page then
+    surfaces as NaN in the scores, while a page still shared by any
+    owner is never poisoned. K-only: V of positions the mask excludes
+    is multiplied by an exact 0 but still *read* by XLA, so V-poison
+    would leak NaN through legitimate masked reads of reused pages.
     """
 
     def __init__(self, cfg, batch: int, max_len: int,
-                 page_size: Optional[int] = None, num_pages: Optional[int] = None):
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None,
+                 poison_freed: bool = False):
         hdp = cfg.hdp
         self.scout = hdp is not None and hdp.enabled
         ps = page_size or (hdp.block_k if self.scout else 16)
@@ -190,6 +242,7 @@ class PagedKVCache(_DonatableCache):
         self.pages_per_slot = -(-max_len // ps)
         self.num_pages = (1 + batch * self.pages_per_slot
                           if num_pages is None else num_pages)
+        self.poison_freed = poison_freed
         L, N, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
         dt = jnp.dtype(cfg.dtype)
         shape = (L, self.num_pages, ps, N, hd)
@@ -199,16 +252,35 @@ class PagedKVCache(_DonatableCache):
         }
         if self.scout:
             self.cache["k_scout"] = jnp.zeros(shape, jnp.int8)
-        self._free: List[int] = list(range(1, self.num_pages))
+        self.allocator = PageAllocator(self.num_pages, reserved=1,
+                                       on_free=self._on_free)
         self._slot_pages: Dict[int, List[int]] = {}
+        self._slot_floor: Dict[int, int] = {}
         self._table = np.zeros((batch, self.pages_per_slot), np.int32)
         self._table_dev: Optional[jnp.ndarray] = None
         self.peak_pages = 0
+        self._insert_jit = jax.jit(self._insert_fn, donate_argnums=(0,))
+        self._cow_jit = jax.jit(self._cow_fn, donate_argnums=(0,))
+        self._gather_jit = jax.jit(self._gather_fn)
 
     # ---------------------------------------------------------- host state
     @property
+    def _free(self) -> List[int]:
+        """Free-list view (read-only; kept for tests/introspection)."""
+        return self.allocator._free
+
+    @property
     def pages_in_use(self) -> int:
-        return sum(len(p) for p in self._slot_pages.values())
+        """Distinct live pages — slot-owned, shared, or prefix-cached."""
+        return self.allocator.in_use
+
+    def slot_pages(self, slot: int) -> List[int]:
+        return list(self._slot_pages.get(slot, []))
+
+    def first_owned(self, slot: int) -> int:
+        """Index of the first slot-owned (writable) page in the table row;
+        earlier entries are shared read-only prefix pages."""
+        return self._slot_floor.get(slot, 0)
 
     def table(self) -> jnp.ndarray:
         """Device copy of the page table, re-uploaded only after
@@ -217,63 +289,136 @@ class PagedKVCache(_DonatableCache):
             self._table_dev = jnp.asarray(self._table)
         return self._table_dev
 
+    def assign(self, slot: int, pages: List[int], first_owned: int = 0) -> None:
+        """Install `pages` (each already holding one ref owned by this
+        slot) as the slot's table row; entries before `first_owned` are
+        shared read-only prefix pages the decode write path must never
+        touch (enforced by the write floor threaded into the decode jit).
+        """
+        if slot in self._slot_pages:
+            self.free(slot)
+        if len(pages) > self.pages_per_slot:
+            raise ValueError(
+                f"slot {slot}: {len(pages)} pages exceed table width "
+                f"{self.pages_per_slot}")
+        self._slot_pages[slot] = list(pages)
+        self._slot_floor[slot] = first_owned
+        self._table[slot, :] = 0
+        self._table[slot, :len(pages)] = pages
+        self._table_dev = None
+        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+
     def alloc(self, slot: int, n_tokens: int) -> List[int]:
-        """Reserve pages for `n_tokens` cache positions of `slot`."""
+        """Reserve fresh pages for `n_tokens` cache positions of `slot`."""
         if slot in self._slot_pages:
             self.free(slot)
         need = max(1, -(-n_tokens // self.page_size))
         if need > self.pages_per_slot:
             raise ValueError(
                 f"slot {slot}: {n_tokens} tokens exceed max_len {self.max_len}")
-        if need > len(self._free):
-            raise RuntimeError(
-                f"page pool exhausted: need {need}, free {len(self._free)}")
-        pages = [self._free.pop(0) for _ in range(need)]
-        self._slot_pages[slot] = pages
-        self._table[slot, :] = 0
-        self._table[slot, :need] = pages
-        self._table_dev = None
-        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+        pages = self.allocator.alloc(need)
+        self.assign(slot, pages)
         return pages
 
     def free(self, slot: int) -> None:
-        # returned pages go to the FRONT: the next allocation reuses the
-        # hottest pages, which also makes reuse deterministic to test
-        self._free[:0] = self._slot_pages.pop(slot, [])
+        """Release the slot's refs; pages truly free only when unshared."""
+        self.allocator.unref(self._slot_pages.pop(slot, []))
+        self._slot_floor.pop(slot, None)
         self._table[slot, :] = 0
         self._table_dev = None
 
+    def _on_free(self, pages: List[int]) -> None:
+        if self.poison_freed and pages:
+            idx = jnp.asarray(pages, jnp.int32)
+            self.cache = {**self.cache,
+                          "k_pages": self.cache["k_pages"].at[:, idx].set(
+                              jnp.nan)}
+
     # -------------------------------------------------------------- insert
-    def insert(self, one_cache, slot: int, row: int = 0) -> None:
+    def _row_to_pages(self, k, row, npg):
+        """[L, B, S, N, hd] row -> [L, npg, ps, N, hd] page-shaped."""
+        L, _, S, N, hd = k.shape
+        ps = self.page_size
+        kr = jax.lax.dynamic_index_in_dim(k, row, 1, keepdims=False)
+        pad = npg * ps - S
+        if pad > 0:
+            kr = jnp.pad(kr, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return kr[:, :npg * ps].reshape(L, npg, ps, N, hd)
+
+    def _insert_fn(self, pool, k, v, idx, row):
+        """Scatter one request-cache row into the (donated) pool.
+
+        `idx` [pages_per_slot] holds the destination pool page per cache
+        page; entries of 0 redirect to the scratch page, which absorbs
+        bucket padding and the shared-prefix span without touching any
+        real page (scratch content stays arbitrary-but-finite). The
+        scatter covers only the pages the request cache can fill
+        (ceil(S / ps), a static shape) — a short bucket does not pay a
+        pages_per_slot-wide write.
+        """
+        npg = min(-(-k.shape[2] // self.page_size), self.pages_per_slot)
+        kp = self._row_to_pages(k, row, npg)
+        vp = self._row_to_pages(v, row, npg)
+        flat = idx[:npg].astype(jnp.int32)
+        new = {
+            "k_pages": pool["k_pages"].at[:, flat].set(
+                kp.astype(pool["k_pages"].dtype)),
+            "v_pages": pool["v_pages"].at[:, flat].set(
+                vp.astype(pool["v_pages"].dtype)),
+        }
+        if self.scout:
+            from repro.models.attention import scout_int8
+            new["k_scout"] = pool["k_scout"].at[:, flat].set(
+                scout_int8(kp, self.cfg.hdp))
+        return new
+
+    def insert(self, one_cache, slot: int, row: int = 0,
+               first_page: int = 0) -> None:
         """Scatter row `row` of a prefill cache into `slot`'s pages.
 
         Prefill positions past the slot's allocation are bucket padding —
         causally dead and overwritten by decode before they are ever
-        visible — so they are simply dropped."""
+        visible — and cache pages before `first_page` (a shared prefix
+        gathered from the pool, already resident) must not be rewritten:
+        both are redirected to the scratch page."""
         pages = self._slot_pages[slot]
-        ps = self.page_size
-        k = one_cache["k"][:, row]                     # [L, S, N, hd]
-        v = one_cache["v"][:, row]
-        L, S, N, hd = k.shape
-        npg = min(-(-S // ps), len(pages))
-        pad = npg * ps - min(S, npg * ps)
+        idx = np.zeros(self.pages_per_slot, np.int32)
+        idx[first_page:len(pages)] = pages[first_page:]
+        self._donating(self._insert_jit, one_cache["k"], one_cache["v"],
+                       jnp.asarray(idx), jnp.asarray(row, jnp.int32))
 
-        def to_pages(x):
-            x = x[:, :npg * ps]
-            if pad:
-                x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
-            return x.reshape(L, npg, ps, N, hd)
+    # ----------------------------------------------------- prefix sharing
+    def _cow_fn(self, pool, src, dst):
+        return {name: leaf.at[:, dst].set(leaf[:, src])
+                for name, leaf in pool.items()}
 
-        idx = jnp.asarray(pages[:npg], jnp.int32)
-        kp, vp = to_pages(k), to_pages(v)
-        self.cache["k_pages"] = self.cache["k_pages"].at[:, idx].set(
-            kp.astype(self.cache["k_pages"].dtype))
-        self.cache["v_pages"] = self.cache["v_pages"].at[:, idx].set(
-            vp.astype(self.cache["v_pages"].dtype))
-        if self.scout:
-            from repro.models.attention import scout_int8
-            self.cache["k_scout"] = self.cache["k_scout"].at[:, idx].set(
-                scout_int8(kp, self.cfg.hdp))
+    def cow(self, src: int, dst: int) -> None:
+        """Copy-on-write: duplicate page `src` into owned page `dst`
+        (all pools, scout copy included) through the donated pool."""
+        self._donating(self._cow_jit, jnp.asarray(src, jnp.int32),
+                       jnp.asarray(dst, jnp.int32))
+
+    def _gather_fn(self, kp, vp, idx):
+        """Pool pages -> contiguous [L, 1, max_len, N, hd] request cache.
+
+        Positions past the real prefix read the scratch page: arbitrary
+        but finite, and masked to an exact-zero contribution by every
+        attention path (same contract as bucket padding)."""
+        L, _, ps, N, hd = kp.shape
+
+        def to_cache(pool):
+            g = pool[:, idx].reshape(L, self.pages_per_slot * ps, N, hd)
+            return g[:, None, :self.max_len]
+
+        return {"k": to_cache(kp), "v": to_cache(vp)}
+
+    def gather_prefix(self, pages: List[int]) -> Dict[str, jnp.ndarray]:
+        """Build a request cache seeded with the shared prefix pages —
+        the cache the suffix-only chunked prefill then appends to."""
+        idx = np.zeros(self.pages_per_slot, np.int32)
+        idx[:len(pages)] = pages
+        return self._gather_jit(self.cache["k_pages"], self.cache["v_pages"],
+                                jnp.asarray(idx))
 
     # ------------------------------------------------------------ metrics
     def _page_bytes(self) -> int:

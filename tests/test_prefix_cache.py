@@ -1,0 +1,444 @@
+"""Refcounted page allocator + radix-tree prefix caching.
+
+Load-bearing guarantees pinned here:
+
+* allocator refcount invariants hold under interleaved submit/finish
+  with shared prompts: every page's refcount equals its slot owners
+  plus its prefix-cache residency, and free + in-use conserves capacity;
+* a prefix-cache hit is token-identical to cold prefill, against both
+  the cold paged engine and the dense-layout engine (full hits, suffix
+  hits and chunked long-prompt hits);
+* extending a shared prefix's tail copies the page first (COW): the
+  donor's cached page bytes never change, and the write floor threaded
+  into the decode jit fences shared pages from the K/V write;
+* under pool pressure, LRU unreferenced cached pages are evicted —
+  serving keeps completing instead of hard-failing;
+* NaN poison lands on *true free only*: a page still shared by any
+  owner is never poisoned (last-unref semantics);
+* batched prefill donates the serving cache (fused prefill+scatter jit)
+  and take()/put() guard stale handles;
+* parked slots are masked out of the batchwise sparsity means.
+
+Identity tests run ``head_pruning=False``: HDP's early head gate is a
+whole-forward decision (theta_head sums over every position the call
+sees), so prefill hidden states are only prefix-causal while the gate
+decisions agree — the same per-forward-call caveat chunked prefill
+documents. The stock-config identity on a realistic shared-prefix
+workload is asserted by ``benchmarks.run --only serving_prefix``.
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.attention import AttnSpec
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.serving import Engine, PageAllocator, RadixPrefixCache, Request
+from repro.serving.kv_cache import DonatedCacheError, PagedKVCache
+
+
+def _qwen(head_pruning=False):
+    cfg = reduced(get_config("qwen2-1.5b"))
+    return cfg.replace(hdp=cfg.hdp.replace(calib="none",
+                                           head_pruning=head_pruning))
+
+
+def _shared_prompts(n_tail=3, prefix_len=20, seed=0, vocab=250):
+    """Prompts sharing a page-aligned prefix + aligned sub-prefix prompts."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(1, vocab, size=prefix_len).tolist()
+    prompts = [shared + rng.integers(1, vocab, size=5 + i).tolist()
+               for i in range(n_tail)]
+    prompts.append(shared[:6])     # full-page-aligned prefix -> full hit
+    prompts.append(shared[:12])    # deeper full hit
+    return prompts
+
+
+def _serve(cfg, params, prompts, *, prefix, max_new=4, layout=None, **kw):
+    if layout is not None:
+        kw["attn"] = AttnSpec(layout=layout)
+    eng = Engine(cfg, params=params, max_batch=2, max_len=64,
+                 prefill_buckets=(16, 32), prefix_cache=prefix, **kw)
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, max_new_tokens=max_new))
+    res = eng.run()
+    return eng, {u: r.tokens for u, r in res.items()}
+
+
+# ------------------------------------------------------------- allocator unit
+def test_allocator_refcount_lifecycle():
+    al = PageAllocator(8, reserved=1)
+    assert al.capacity == 7 and al.available == 7 and al.in_use == 0
+    a = al.alloc(3)
+    assert 0 not in a and al.in_use == 3
+    al.ref([a[0]])                       # second owner
+    assert al.refcount(a[0]) == 2
+    freed = al.unref(a)                  # drop first owner of all three
+    assert freed == a[1:] and al.in_use == 1
+    assert al.refcount(a[0]) == 1
+    assert al.unref([a[0]]) == [a[0]]    # last unref -> true free
+    assert al.available == 7 and al.in_use == 0
+    with pytest.raises(ValueError):
+        al.unref([a[0]])                 # double free
+    with pytest.raises(ValueError):
+        al.ref([a[0]])                   # ref of a free page
+    with pytest.raises(RuntimeError):
+        al.alloc(8)                      # beyond capacity
+    # freed pages return to the FRONT: deterministic hot reuse
+    assert al.alloc(2) == a[:2]
+
+
+def test_radix_match_insert_lru():
+    al = PageAllocator(16, reserved=1)
+    tree = RadixPrefixCache(al, page_size=2)
+    toks = [1, 2, 3, 4, 5, 6]
+    pages = al.alloc(3)
+    assert tree.insert(toks, pages) == 3
+    assert tree.cached_pages == 3
+    assert [al.refcount(p) for p in pages] == [2, 2, 2]
+    al.unref(pages)                      # original owner retires
+    m = tree.match([1, 2, 3, 4, 9, 9])   # partial: two chunks
+    assert m == pages[:2] and al.refcount(pages[0]) == 2
+    al.unref(m)
+    assert tree.match([7, 7]) == [] and tree.misses == 1
+    # LRU: matched path was bumped; the unmatched tail page evicts first
+    assert tree.evict(1) == 1
+    assert tree.cached_pages == 2 and al.refcount(pages[2]) == 0
+    # pinned leaves (slot-referenced) are skipped
+    m = tree.match([1, 2, 3, 4])
+    assert tree.evict(4) == 0            # both remaining pages pinned
+    al.unref(m)
+    assert tree.evict(4) == 2 and tree.cached_pages == 0
+    assert al.in_use == 0
+
+
+# ------------------------------------------------------------ token identity
+def test_prefix_hit_matches_cold_and_dense():
+    """Full hits, suffix hits and sub-prefix hits are token-identical to
+    a cold paged engine and to the dense-layout engine."""
+    cfg = _qwen()
+    prompts = _shared_prompts()
+    e1, cold = _serve(cfg, None, prompts, prefix=False)
+    e2, hot = _serve(cfg, e1.params, prompts, prefix=True)
+    _, dense = _serve(cfg, e1.params, prompts, prefix=None, layout="dense")
+    assert hot == cold, f"hit tokens diverged: {hot} != {cold}"
+    assert dense == cold
+    s = e2.summary()
+    assert s["prefix_hits"] > 0 and s["prefix_hit_tokens"] > 0
+    assert s["cow_copies"] >= 1          # the two full hits COW their tail
+    assert s["pages_cached"] > 0
+
+
+def test_long_prompt_hit_matches_cold():
+    """A >bucket prompt sharing a long prefix goes through the deferred
+    (late-matched) chunked path and must match the cold chunked path."""
+    cfg = _qwen()
+    rng = np.random.default_rng(7)
+    shared = rng.integers(1, 250, size=40).tolist()   # > largest bucket (32)
+    prompts = [shared + rng.integers(1, 250, size=4 + i).tolist()
+               for i in range(2)]
+    e1, cold = _serve(cfg, None, prompts, prefix=False)
+    e2, hot = _serve(cfg, e1.params, prompts, prefix=True)
+    assert hot == cold
+    # second long prompt was admitted in the same wave yet still hit the
+    # pages the first one registered moments earlier (deferred matching)
+    assert e2.summary()["prefix_hits"] >= 1
+
+
+# ------------------------------------------------------- refcount invariants
+def _check_refcounts(eng):
+    """Every page's refcount == its slot owners + prefix-cache residency."""
+    owners = Counter()
+    for pages in eng.pages._slot_pages.values():
+        owners.update(pages)
+    cached = set()
+    stack = list(eng.prefix._root.children.values())
+    while stack:
+        n = stack.pop()
+        cached.add(n.page)
+        stack.extend(n.children.values())
+    al = eng.pages.allocator
+    for p in range(1, eng.pages.num_pages):
+        assert al.refcount(p) == owners[p] + (p in cached), \
+            f"page {p}: refs {al.refcount(p)} != owners {owners[p]} " \
+            f"+ cached {p in cached}"
+    assert al.available + al.in_use == al.capacity
+
+
+def test_refcounts_under_interleaved_submit_finish():
+    cfg = _qwen()
+    prompts = _shared_prompts(n_tail=4, seed=3)
+    eng = Engine(cfg, max_batch=2, max_len=64, prefill_buckets=(16, 32),
+                 prefix_cache=True)
+    for uid, p in enumerate(prompts):
+        # staggered budgets force slots to finish and refill mid-flight
+        eng.submit(Request(uid, p, max_new_tokens=3 + (uid % 3)))
+    steps = 0
+    while (eng._queue or eng._active) and steps < 200:
+        eng.step()
+        _check_refcounts(eng)
+        steps += 1
+    assert not eng._queue and not eng._active
+    # at drain: only the prefix cache holds pages
+    assert eng.pages.pages_in_use == eng.prefix.cached_pages
+
+
+# ------------------------------------------------------------------ COW
+def test_cow_on_shared_tail_extension():
+    """A full-prefix hit extends the shared chain's tail: the last shared
+    page must be COW'd so the donor's cached page bytes never change."""
+    cfg = _qwen()
+    rng = np.random.default_rng(11)
+    donor = rng.integers(1, 250, size=13).tolist()
+    eng = Engine(cfg, max_batch=1, max_len=64, prefill_buckets=(16, 32),
+                 prefix_cache=True)
+    eng.submit(Request(0, donor, max_new_tokens=3))
+    eng.run()
+    # donor cached (13-1)//2 = 6 pages covering tokens [0, 12)
+    assert eng.prefix.cached_pages == 6
+    matched = eng.prefix.match(donor[:12])
+    tail_page = matched[-1]
+    eng.pages.allocator.unref(matched)   # match refs for the caller
+    before = np.asarray(eng.pages.cache["k_pages"][:, tail_page])
+
+    eng.submit(Request(1, donor[:12], max_new_tokens=3))   # full hit
+    res = eng.run()
+    s = eng.summary()
+    assert s["cow_copies"] == 1
+    after = np.asarray(eng.pages.cache["k_pages"][:, tail_page])
+    np.testing.assert_array_equal(before, after)
+
+    solo = Engine(cfg, params=eng.params, max_batch=1, max_len=64,
+                  prefill_buckets=(16, 32), prefix_cache=False)
+    solo.submit(Request(9, donor[:12], max_new_tokens=3))
+    assert res[1].tokens == solo.run()[9].tokens
+
+
+def test_write_floor_fences_shared_pages():
+    """Even with COW bypassed, the write floor threaded into the decode
+    jit redirects sub-floor writes to the scratch page (defence in depth
+    for the shared-page immutability contract)."""
+    cfg = _qwen()
+    eng = Engine(cfg, max_batch=2, max_len=32, prefix_cache=False)
+    eng.submit(Request(0, [5, 6, 7, 8], max_new_tokens=2))
+    eng._admit()
+    slot_pages = eng.pages.slot_pages(0)
+    # raise the floor above every page: all decode writes must divert
+    eng._floor_dev = eng._floor_dev.at[0].set(len(slot_pages))
+    before = {p: np.asarray(eng.pages.cache["k_pages"][:, p])
+              for p in slot_pages}
+    eng.step()
+    for p, b in before.items():
+        np.testing.assert_array_equal(
+            b, np.asarray(eng.pages.cache["k_pages"][:, p]),
+            err_msg=f"page {p} written below the floor")
+
+
+# ------------------------------------------------------------------ eviction
+def test_eviction_under_pressure():
+    cfg = _qwen()
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, 250, size=20).tolist() for _ in range(3)]
+    # pool sized so the 2nd/3rd distinct prompts only fit by evicting the
+    # previous prompt's cached pages
+    eng = Engine(cfg, max_batch=1, max_len=32, num_pages=1 + 14,
+                 prefix_cache=True)
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, max_new_tokens=4))
+    res = eng.run()
+    s = eng.summary()
+    assert s["prefix_evictions"] > 0, "pool pressure produced no eviction"
+    assert all(len(r.tokens) == 4 for r in res.values())
+    solo = Engine(cfg, params=eng.params, max_batch=1, max_len=32,
+                  prefix_cache=False)
+    solo.submit(Request(9, prompts[-1], max_new_tokens=4))
+    assert res[2].tokens == solo.run()[9].tokens
+
+
+def test_hit_unwinds_cleanly_on_pool_exhaustion():
+    """A hit that cannot reserve its fresh pages must release its match
+    refs and go back on the queue — refcounts stay balanced and the
+    engine keeps serving after the failure surfaces."""
+    cfg = _qwen()
+    rng = np.random.default_rng(13)
+    donor = rng.integers(1, 250, size=16).tolist()
+    eng = Engine(cfg, max_batch=2, max_len=32, num_pages=1 + 22,
+                 prefix_cache=True)
+    eng.submit(Request(0, donor, max_new_tokens=2))
+    eng.run()                              # caches (16-1)//2 = 7 pages
+    eng.submit(Request(1, rng.integers(1, 250, size=20).tolist(),
+                       max_new_tokens=4))
+    eng._admit()                           # live blocker slot: 12 pages
+    # suffix hit needing 8 fresh pages with only 3 free and the donor's
+    # cached pages pinned by the match itself -> reservation must fail
+    eng.submit(Request(2, donor + rng.integers(1, 250, size=10).tolist(),
+                       max_new_tokens=4))
+    with pytest.raises(RuntimeError, match="exhausted"):
+        eng.step()
+    assert len(eng._queue) == 1            # hit requeued, not dropped
+    _check_refcounts(eng)                  # match refs released
+    eng._queue.clear()                     # drop the unserviceable request
+    res = eng.run()
+    assert len(res[1].tokens) == 4         # blocker still completes
+
+
+def test_hit_falls_back_to_cold_when_own_match_pins_pool():
+    """A full hit whose own match refs pin every evictable page must not
+    livelock: it releases the refs and serves cold, which may evict the
+    very pages the hit wanted to share."""
+    cfg = _qwen()
+    rng = np.random.default_rng(17)
+    donor = rng.integers(1, 250, size=16).tolist()
+    eng = Engine(cfg, max_batch=2, max_len=32, num_pages=1 + 20,
+                 prefix_cache=True)
+    eng.submit(Request(0, donor, max_new_tokens=2))
+    eng.run()                              # caches 7 pages
+    eng.submit(Request(1, rng.integers(1, 250, size=20).tolist(),
+                       max_new_tokens=4))
+    eng._admit()                           # hog slot: 12 pages, 1 free
+    # full hit needs 2 fresh (COW + generation) with 1 free and all
+    # cached pages pinned by this very match -> must fall back to cold
+    eng.submit(Request(2, donor[:14], max_new_tokens=2))
+    res = eng.run()
+    assert len(res[2].tokens) == 2 and len(res[1].tokens) == 4
+    assert eng.summary()["prefix_evictions"] > 0   # cold path evicted them
+    solo = Engine(cfg, params=eng.params, max_batch=1, max_len=32,
+                  prefix_cache=False)
+    solo.submit(Request(9, donor[:14], max_new_tokens=2))
+    assert res[2].tokens == solo.run()[9].tokens
+
+
+def test_match_alignment_trims_before_counting():
+    al = PageAllocator(16, reserved=1)
+    tree = RadixPrefixCache(al, page_size=2)
+    pages = al.alloc(3)
+    tree.insert([1, 2, 3, 4, 5, 6], pages)
+    # align=2 pages: a 3-page walk trims to 2; a 1-page walk trims to 0
+    # and must count as a miss with no refs taken
+    m = tree.match([1, 2, 3, 4, 5, 6], align=2)
+    assert m == pages[:2] and tree.hits == 1 and tree.hit_tokens == 4
+    al.unref(m)
+    assert tree.match([1, 2, 9], align=2) == []
+    assert tree.misses == 1
+    assert al.refcount(pages[0]) == 2      # only the insert + cache refs
+
+
+def test_pool_exhaustion_still_raises_when_nothing_evictable():
+    cfg = _qwen()
+    eng = Engine(cfg, max_batch=2, max_len=32, num_pages=1 + 12,
+                 prefix_cache=True)
+    eng.submit(Request(0, list(range(1, 21)), max_new_tokens=4))
+    eng._admit()                          # slot 0 holds 12 pages, 0 free
+    eng.submit(Request(1, list(range(30, 50)), max_new_tokens=4))
+    with pytest.raises(RuntimeError, match="exhausted"):
+        eng._admit()                      # nothing evictable: all slot-owned
+
+
+# ------------------------------------------------------------- poison / free
+def test_nan_poison_on_last_unref_only():
+    cfg = _qwen()
+    pool = PagedKVCache(cfg, batch=2, max_len=8, poison_freed=True)
+    pages = pool.alloc(0, 6)              # 3 pages, refcount 1 each
+    finite = jnp.ones_like(pool.cache["k_pages"][:, jnp.asarray(pages)])
+    pool.cache = {**pool.cache, "k_pages": pool.cache["k_pages"]
+                  .at[:, jnp.asarray(pages)].set(finite)}
+    pool.allocator.ref([pages[0]])        # pages[0] shared by a 2nd owner
+    pool.free(0)
+    k = np.asarray(pool.cache["k_pages"])
+    assert np.isfinite(k[:, pages[0]]).all(), \
+        "shared page poisoned before its last unref"
+    assert np.isnan(k[:, pages[1]]).all() and np.isnan(k[:, pages[2]]).all()
+    pool.allocator.unref([pages[0]])      # last owner gone -> poison
+    k = np.asarray(pool.cache["k_pages"])
+    assert np.isnan(k[:, pages[0]]).all()
+
+
+# ------------------------------------------------- batched prefill donation
+def test_batched_prefill_donates_pool():
+    """The fused prefill+scatter jit aliases the page pool in place: the
+    pre-admit pool buffer is deleted, and a stale take() guard trips."""
+    cfg = _qwen()
+    eng = Engine(cfg, max_batch=2, max_len=64, prefill_buckets=(16, 32))
+    for uid in range(2):
+        eng.submit(Request(uid, [1 + uid, 2, 3, 4, 5], max_new_tokens=2))
+    old = eng.pages.cache
+    eng._admit()
+    assert all(old[k].is_deleted() for k in old), \
+        "batched prefill allocated a second page pool"
+    # take()/put() guard across the donating admission path
+    held = eng.pages.take()
+    with pytest.raises(DonatedCacheError):
+        eng.pages.cache
+    eng.pages.put(held)
+    eng.run()
+
+    dense = Engine(cfg, params=eng.params, max_batch=2, max_len=64,
+                   prefill_buckets=(16, 32), attn=AttnSpec(layout="dense"))
+    for uid in range(2):
+        dense.submit(Request(uid, [1 + uid, 2, 3, 4, 5], max_new_tokens=2))
+    old_k = dense.slots.cache["k"]
+    dense._admit()
+    assert old_k.is_deleted(), \
+        "dense batched prefill allocated a second slot cache"
+    dense.run()
+
+
+# ------------------------------------------------------- per-slot stat mask
+def test_parked_slots_masked_from_stats():
+    from repro.attention.stats import AttnStats
+    cfg = _qwen()
+    eng = Engine(cfg, max_batch=2, max_len=32, collect_stats=True)
+    stats = AttnStats(block_sparsity=jnp.asarray([[0.5, 1.0], [0.5, 1.0]]),
+                      head_sparsity=jnp.asarray([[0.25, 1.0], [0.25, 1.0]]))
+    eng._record_stats(stats, mask=np.array([True, False]))
+    assert eng.metrics["block_sparsity"] == pytest.approx(0.5)
+    assert eng.metrics["head_sparsity"] == pytest.approx(0.25)
+    # an all-parked step records nothing
+    eng._record_stats(stats, mask=np.array([False, False]))
+    assert eng.metrics["stat_samples"] == 1
+
+
+def test_engine_decode_stats_are_per_slot():
+    """End-to-end: with one slot parked mid-batch, recorded sparsity uses
+    only live slots (identical to serving the request alone)."""
+    cfg = reduced(get_config("qwen2-1.5b"))
+    cfg = cfg.replace(hdp=cfg.hdp.replace(calib="none"))
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(1, 250, size=10).tolist()
+
+    solo = Engine(cfg, max_batch=1, max_len=64, collect_stats=True)
+    solo.submit(Request(0, prompt, max_new_tokens=4))
+    solo.run()
+
+    # same request in a 2-slot engine: slot 1 never occupied (parked)
+    duo = Engine(cfg, params=solo.params, max_batch=2, max_len=64,
+                 collect_stats=True)
+    duo.submit(Request(0, prompt, max_new_tokens=4))
+    duo.run()
+    assert duo.summary()["block_sparsity"] == \
+        pytest.approx(solo.summary()["block_sparsity"], abs=1e-6)
+    assert duo.summary()["page_sparsity"] == \
+        pytest.approx(solo.summary()["page_sparsity"], abs=1e-6)
+
+
+# ---------------------------------------------------------------- guardrails
+def test_prefix_cache_requires_paged_layout():
+    cfg = _qwen()
+    with pytest.raises(ValueError, match="paged"):
+        Engine(cfg, max_batch=1, max_len=32, prefix_cache=True,
+               attn=AttnSpec(layout="dense"))
+
+
+def test_prefix_cache_env_default(monkeypatch):
+    monkeypatch.setenv("REPRO_PREFIX_CACHE", "1")
+    cfg = _qwen()
+    assert Engine(cfg, max_batch=1, max_len=32).prefix is not None
+    # explicit kwarg wins over the env; dense degrades silently
+    assert Engine(cfg, max_batch=1, max_len=32,
+                  prefix_cache=False).prefix is None
+    assert Engine(cfg, max_batch=1, max_len=32,
+                  attn=AttnSpec(layout="dense")).prefix is None
