@@ -22,12 +22,13 @@ from repro.attention.registry import (BACKEND_ENV, Backend,
                                       default_spec, get_backend,
                                       known_backend_names, list_backends,
                                       register_backend, resolve_backend)
-from repro.attention.spec import AttnCall, AttnSpec, spec_from_legacy
+from repro.attention.spec import (AttnCall, AttnSpec, DraftProfile,
+                                  spec_from_legacy)
 from repro.attention.stats import AttnStats, normalize_stats
 
 __all__ = [
     "AttnCall", "AttnSpec", "AttnStats", "Backend", "BackendUnsupported",
-    "BACKEND_ENV", "attention", "default_spec", "get_backend",
+    "BACKEND_ENV", "DraftProfile", "attention", "default_spec", "get_backend",
     "known_backend_names", "list_backends", "normalize_stats",
     "register_backend", "resolve_backend", "spec_from_legacy",
 ]

@@ -5,11 +5,11 @@ Seven implementations, one registry (reference lives in reference.py):
 | backend            | ports                                        | calls it supports                    |
 |--------------------|----------------------------------------------|--------------------------------------|
 | xla_dense          | chunked/local/decode_attention               | HDP off (dense; paged decode)        |
-| xla_hdp            | hdp_prefill/decode_attention                 | HDP on, dense layout                 |
-| paged_hdp_decode   | hdp_paged_decode_attention (XLA stage 3)     | HDP on, paged decode                 |
+| xla_hdp            | hdp_prefill/decode_attention                 | HDP on, dense layout (+draft/verify) |
+| paged_hdp_decode   | hdp_paged_decode_attention (XLA stage 3)     | HDP on, paged decode (+draft/verify) |
 | pallas_flash       | kernels.flash_attention                      | HDP off, aligned self-attn prefill   |
 | pallas_hdp_block   | kernels.ops.hdp_attention_tpu / FUM stage 3  | HDP on, aligned prefill or paged     |
-| pallas_paged_decode| kernels.hdp_paged_decode (gather-free FUM)   | HDP on, causal unwindowed paged      |
+| pallas_paged_decode| kernels.hdp_paged_decode (gather-free FUM)   | HDP on, causal paged (+verify)       |
 
 Pallas backends rank above XLA only on TPU (``pallas_paged_decode``
 out-ranks ``pallas_hdp_block`` there: it streams surviving pages straight
@@ -71,10 +71,15 @@ def _supports_xla_hdp(call: AttnCall) -> bool:
 @register_backend("xla_hdp", supports=_supports_xla_hdp, priority=10,
                   tags=("xla",))
 def run_xla_hdp(q, k, v, call, *, q_pos, k_pos, cache=None, page_table=None):
-    fn = (A.hdp_decode_attention if call.mode == "decode"
-          else A.hdp_prefill_attention)
-    out, st = fn(q, k, v, q_pos=q_pos, k_pos=k_pos, hdp=call.hdp,
-                 window=call.window, return_stats=call.needs_stats)
+    if call.mode == "decode":
+        out, st = A.hdp_decode_attention(
+            q, k, v, q_pos=q_pos, k_pos=k_pos, hdp=call.hdp,
+            window=call.window, return_stats=call.needs_stats,
+            draft=call.draft, per_query=call.verify)
+    else:
+        out, st = A.hdp_prefill_attention(
+            q, k, v, q_pos=q_pos, k_pos=k_pos, hdp=call.hdp,
+            window=call.window, return_stats=call.needs_stats)
     return out, normalize_stats(st)
 
 
@@ -87,7 +92,9 @@ def _run_paged(q, call, *, q_pos, k_pos, cache, page_table, stage3):
     out, st = A.hdp_paged_decode_attention(
         q, cache["k_pages"], cache["v_pages"], cache["k_scout"], page_table,
         q_pos=q_pos, k_pos=k_pos, hdp=call.hdp, window=call.window,
-        return_stats=call.needs_stats, stage3=stage3)
+        return_stats=call.needs_stats, stage3=stage3,
+        draft=call.draft, per_query=call.verify,
+        fk_pool=cache.get("f_scout"))
     return out, normalize_stats(st)
 
 
@@ -123,6 +130,10 @@ def _supports_pallas_hdp(call: AttnCall) -> bool:
     if call.hdp is None or call.trainable or call.window != 0 \
             or call.hdp.approx_softmax:
         return False
+    if call.draft is not None or call.verify:
+        # the block kernel computes neither the draft score sources nor
+        # per-query-row scouts; speculative calls fall down the chain
+        return False
     if call.layout == "paged":
         return True
     return (call.mode == "prefill" and call.self_aligned
@@ -150,13 +161,16 @@ def _supports_pallas_paged(call: AttnCall) -> bool:
 
     Needs the plain causal paged-decode shape: the kernel's per-row
     validity is ``cols < kv_len`` (upper bound only), which is exactly the
-    causal mask of single-token decode but cannot express a sliding
-    window's lower bound or a non-causal extent.
+    causal mask of single-token decode — or of a multi-query verify call,
+    whose consecutive rows each extend the bound by their query index —
+    but cannot express a sliding window's lower bound or a non-causal
+    extent. Draft calls fall down the chain: the kernel reads the
+    full-precision pool, which the draft score sources never touch.
     """
     return (call.hdp is not None and call.layout == "paged"
             and call.mode == "decode" and not call.trainable
             and call.window == 0 and not call.hdp.approx_softmax
-            and call.causal and call.hdp.causal)
+            and call.causal and call.hdp.causal and call.draft is None)
 
 
 @register_backend("pallas_paged_decode", supports=_supports_pallas_paged,

@@ -149,9 +149,14 @@ def _hdp_decode(q, k, v, call, q_pos, k_pos, *, ik=None, fixed_grid=False,
 
     ``ik``: pre-quantized integer scout copy of K (paged: stored at cache
     write time); ``fixed_grid`` selects the calibration-free fixed-point
-    split the paged backends always operate on.
+    split the paged backends always operate on. Verify calls
+    (``call.verify``) scout per query row; draft calls (``call.draft``)
+    switch the score source to the profile's draft approximation — the
+    oracle mirrors the production draft semantics exactly, so draft
+    conformance is testable backend-to-backend.
     """
-    from repro.models.attention import _fixed_split, _mask_bias
+    from repro.models.attention import (_expand_keep, _fixed_split,
+                                        _head_gate, _mask_bias)
     hdp = call.hdp
     bk = hdp.block_k
     Sk = k.shape[1]
@@ -176,25 +181,41 @@ def _hdp_decode(q, k, v, call, q_pos, k_pos, *, ik=None, fixed_grid=False,
     valid = _mask_bias(q_pos, _pad_pos(k_pos, Skp), call.causal, call.window)
     s_int = jnp.einsum("bngqh,bsnh->bngqs", iq, ik,
                        preferred_element_type=F32)
-    keep, bvalid, _, theta_head, head_kept = decode_scout(s_int, valid, hdp)
+    keep, bvalid, _, theta_head, head_kept = decode_scout(
+        s_int, valid, hdp, per_query=call.verify)
 
-    s = jnp.einsum("bngqh,bsnh->bngqs", qq, kq, preferred_element_type=F32)
-    if hdp.approx:
-        s = s - jnp.einsum("bngqh,bsnh->bngqs", fq, fk,
-                           preferred_element_type=F32)
+    if call.draft is not None and call.draft.scores != "approx":
+        s = s_int
+        if call.draft.scores == "scout":
+            # QQ·IK + IQ·FK^: the quantized-fraction term re-quantizes FK
+            # to the f_scout grid, matching the production pools bit for
+            # bit (the write-time copy holds the same rounded values)
+            from repro.models.attention import FRAC_SCOUT_SCALE
+            fkh = jnp.round(fk * FRAC_SCOUT_SCALE) / FRAC_SCOUT_SCALE
+            s = s + jnp.einsum("bngqh,bsnh->bngqs", fq, ik,
+                               preferred_element_type=F32) \
+                  + jnp.einsum("bngqh,bsnh->bngqs", iq, fkh,
+                               preferred_element_type=F32)
+    else:
+        s = jnp.einsum("bngqh,bsnh->bngqs", qq, kq,
+                       preferred_element_type=F32)
+        if hdp.approx:
+            s = s - jnp.einsum("bngqh,bsnh->bngqs", fq, fk,
+                               preferred_element_type=F32)
     s = s * (scale * rescale)
-    keep_e = jnp.repeat(keep, bk, axis=-1)[..., None, :] & valid
+    keep_e = _expand_keep(keep, bk, valid, s.ndim)
     p = blocking.masked_softmax(s, keep_e)
     out = jnp.einsum("bngqs,bsnh->bngqh", p, vp.astype(F32),
                      preferred_element_type=F32)
-    out = out * head_kept[..., None, None].astype(F32)
+    out = _head_gate(out, head_kept.astype(F32))
 
     stats = None
     if call.needs_stats:
         bs, hs = _sparsity_stats_per_slot(keep, bvalid, head_kept)
         page_sp = None
         if page_table is not None:
-            fetched = (keep & head_kept[..., None]).any(axis=(1, 2))
+            fetched = (keep & head_kept[..., None]).any(
+                axis=tuple(range(1, keep.ndim - 1)))
             alloc = jnp.maximum((page_table > 0).astype(F32).sum(-1), 1.0)
             page_sp = 1.0 - jnp.minimum(
                 (fetched & (page_table > 0)).astype(F32).sum(-1) / alloc, 1.0)

@@ -28,6 +28,58 @@ from repro.core.config import HDPConfig
 MODES = ("prefill", "decode")
 LAYOUTS = ("dense", "paged")
 CACHE_LAYOUTS = ("auto", "dense", "paged")
+DRAFT_SCORES = ("scout", "int", "approx")
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftProfile:
+    """Approximate-attention overlay for the self-speculative draft pass.
+
+    The draft runs the same transformer with a cheaper attention step and
+    proposes tokens that a full-fidelity verify pass then accepts or
+    rejects — so the profile only trades *acceptance rate* against *draft
+    cost*, never output correctness (exact-match acceptance keeps the
+    committed tokens identical to non-speculative greedy decode).
+
+    Attributes:
+      rho_b / tau_h: optional overrides of the HDP survival thresholds —
+        a more aggressive grid than the exact pass (fewer blocks/heads
+        survive, so the draft fetches less KV memory).
+      scores: score source of the draft attention:
+        * ``"scout"`` — ``QQ·IK + IQ·FK^`` over the two int8 scout
+          copies of K (the integer copy the decode scout always streams,
+          plus a write-time quantized-fraction copy): recovers the exact
+          pass's approximate scores to within the 2^-6 fraction grid,
+          and the full-precision K of the cache is never read by a
+          draft step. The default — near-exact proposals at int8
+          bandwidth.
+        * ``"int"`` — the scout matmul itself (``IQ·IK``, integer parts
+          only) reused as the score; the cheapest draft, no extra matmul.
+        * ``"approx"`` — the exact pass's ``QQ·KQ - FQ·FK``; the draft
+          is then a pruning-only approximation (thresholds overrides do
+          all the work).
+    """
+
+    rho_b: Optional[float] = None
+    tau_h: Optional[float] = None
+    scores: str = "scout"
+
+    def __post_init__(self):
+        if self.scores not in DRAFT_SCORES:
+            raise ValueError(
+                f"draft scores must be one of {DRAFT_SCORES}, "
+                f"got {self.scores!r}")
+        if self.rho_b is not None and not (-1.0 < self.rho_b < 1.0):
+            raise ValueError(f"draft rho_b must be in (-1, 1), got {self.rho_b}")
+
+    def overlay(self, hdp: HDPConfig) -> HDPConfig:
+        """HDP config the draft attends with (threshold overrides applied)."""
+        kw = {}
+        if self.rho_b is not None:
+            kw["rho_b"] = self.rho_b
+        if self.tau_h is not None:
+            kw["tau_h"] = self.tau_h
+        return hdp.replace(**kw) if kw else hdp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +103,16 @@ class AttnCall:
       chunk: KV chunk length hint for flash-style scanning (0 = whole
         extent); a perf knob, never a semantic one.
       needs_stats: backend should return populated AttnStats.
+      draft: self-speculative draft overlay (``hdp`` already carries the
+        overlaid thresholds; this selects the draft score source), or
+        None for a full-fidelity call. Only meaningful with HDP active —
+        without a scout there is no approximate path to draft with.
+      verify: multi-query decode (Sq > 1 query rows over one cache, the
+        speculative verify shape). HDP backends must then run the scout
+        *per query row* — each row's keep mask / head gate must equal
+        what its own single-token decode step would compute, or
+        exact-match acceptance loses token identity. Verify rows sit at
+        consecutive positions (row j's KV extent is row 0's plus j).
     """
 
     mode: str
@@ -63,6 +125,8 @@ class AttnCall:
     trainable: bool = False
     chunk: int = 0
     needs_stats: bool = False
+    draft: Optional[DraftProfile] = None
+    verify: bool = False
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -72,8 +136,14 @@ class AttnCall:
                 f"layout must be one of {LAYOUTS}, got {self.layout!r}")
         if self.layout == "paged" and self.mode != "decode":
             raise ValueError("paged layout is a decode-time serving format")
+        if (self.draft is not None or self.verify) and self.mode != "decode":
+            raise ValueError("draft/verify are decode-time call shapes")
         if self.hdp is not None and not self.hdp.enabled:
             object.__setattr__(self, "hdp", None)
+        if self.hdp is None:
+            # no scout => nothing to approximate; a draft call degenerates
+            # to the exact attention step (still a valid token proposer)
+            object.__setattr__(self, "draft", None)
 
     def replace(self, **kw) -> "AttnCall":
         return dataclasses.replace(self, **kw)

@@ -34,7 +34,8 @@ def calibrated_split(x: jnp.ndarray, cfg: HDPConfig):
     return s, xq, i, f
 
 
-def decode_scout(int_scores: jnp.ndarray, valid: jnp.ndarray, cfg: HDPConfig):
+def decode_scout(int_scores: jnp.ndarray, valid: jnp.ndarray, cfg: HDPConfig,
+                 per_query: bool = False):
     """Decode-shaped integer scout: one block row per head over KV pages.
 
     ``int_scores`` [..., Sq, Sk] are integer-part attention scores for a
@@ -44,13 +45,28 @@ def decode_scout(int_scores: jnp.ndarray, valid: jnp.ndarray, cfg: HDPConfig):
     keep mask doubles as the page fetch list (Fetch-Upon-Mask). ``valid``
     is a positionally-broadcastable bool mask [..., Sq, Sk].
 
-    Returns (keep, bvalid, theta, theta_head, head_kept):
+    ``per_query`` keeps the Sq axis instead of pooling it: each query row
+    gets its own block row, importances and head gate, exactly as if it
+    had run through ``Sq`` independent single-row scouts. This is the
+    speculative-verify shape — row ``j`` of a multi-query verify call
+    must reproduce the keep mask its own sequential decode step would
+    have computed, or exact-match acceptance loses token identity.
+
+    Returns (keep, bvalid, theta, theta_head, head_kept), where ``[...]``
+    below gains a trailing Sq axis when ``per_query``:
       keep [..., nk] bool      — pages that survive block pruning
       bvalid [..., nk] bool    — pages with any valid position
       theta [..., nk] f32      — block importances
       theta_head [...]         — head importances (normalized per cfg)
       head_kept [...] bool     — early head gate
     """
+    if per_query:
+        # insert a singleton pooled-q axis per row: the pooled math below
+        # then reduces over one query at a time, yielding [..., Sq, nk]
+        # (valid carries the Sq axis — _mask_bias always composes q
+        # validity in — so the same insertion keeps them aligned)
+        int_scores = int_scores[..., :, None, :]
+        valid = valid[..., :, None, :]
     theta, bvalid = blocking.pooled_block_theta(int_scores, valid, cfg.block_k)
     if cfg.block_pruning:
         thr = blocking.row_threshold(theta, cfg.rho_b, bvalid)

@@ -11,8 +11,13 @@ dataflow, now honored at the memory system level for serving decode.
 
 Grid is (B, N, max_keep): one batch row x kv head per program, streaming
 that row's kept pages in ascending logical order (monotone DMA). The G
-query heads of a GQA group ride in the block's sublane dim and share the
-page stream; per-query-head keep masks still apply inside the softmax.
+query heads of a GQA group AND the Sq query rows of a multi-query verify
+call ride in the block's sublane dim and share the page stream — a
+speculative-verify round reads each surviving page ONCE for all Sq rows
+instead of once per token, which is the round's bandwidth win. Per-row
+keep masks and KV extents still apply inside the softmax: verify rows
+sit at consecutive positions, so row ``r``'s valid extent is the base
+``kv_len`` plus its query index (``r % Sq``) — no extra prefetch array.
 K arrives full-precision from the pool and is snapped to the fixed-point
 grid on the VPU (trunc/round cost no extra HBM traffic), matching the
 write-time-quantized semantics of the XLA stage exactly.
@@ -36,7 +41,7 @@ NEG = -1e30
 def _kernel(pid_ref, logical_ref, cnt_ref, len_ref,   # scalar prefetch
             q_ref, k_ref, v_ref, keep_ref, o_ref,     # tensors
             acc_ref, m_ref, l_ref,                    # scratch
-            *, scale, approx, int_bits, frac_bits, ps, max_keep):
+            *, scale, approx, int_bits, frac_bits, ps, max_keep, n_q):
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -48,7 +53,8 @@ def _kernel(pid_ref, logical_ref, cnt_ref, len_ref,   # scalar prefetch
 
     @pl.when(j < cnt_ref[b])
     def _body():
-        q = q_ref[0, 0].astype(F32)                   # [G, hd] (fixed grid)
+        rows = q_ref.shape[2] * q_ref.shape[3]        # G * Sq
+        q = q_ref[0, 0].reshape(rows, -1).astype(F32)  # [G*Sq, hd] fixed grid
         k = k_ref[0, :, 0].astype(F32)                # [ps, hd] pool page
         # snap the full-precision page to the write-time scout's grid on
         # the VPU (the shared core.quant ops are plain jnp — safe here)
@@ -63,8 +69,11 @@ def _kernel(pid_ref, logical_ref, cnt_ref, len_ref,   # scalar prefetch
         s = s * scale
         cols = logical_ref[b, j] * ps + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
-        valid = cols < len_ref[b]
-        valid = valid & (keep_ref[0, 0, 0] > 0)[:, None]
+        # per-row KV extent: verify rows are consecutive positions, so
+        # row r (query index r % Sq) extends the base length by r % Sq
+        sq_idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % n_q
+        valid = cols < (len_ref[b] + sq_idx)
+        valid = valid & (keep_ref[0, 0, 0].reshape(rows) > 0)[:, None]
         s = jnp.where(valid, s, NEG)
 
         m_prev = m_ref[...]
@@ -82,7 +91,8 @@ def _kernel(pid_ref, logical_ref, cnt_ref, len_ref,   # scalar prefetch
     @pl.when(j == max_keep - 1)
     def _fin():
         l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        o_ref[0, 0] = (acc_ref[...] / l).reshape(o_ref.shape[2:]).astype(
+            o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -91,45 +101,48 @@ def hdp_paged_fum_decode(qq, k_pool, v_pool, page_ids, logical, counts,
                          keep, kv_len, *, approx: bool = True,
                          int_bits: int = 4, frac_bits: int = 12,
                          interpret: bool = False):
-    """qq [B,N,G,hd] fixed-grid query; k/v_pool [P,ps,N,hd] page pools;
-    page_ids/logical [B,mk] int32 (pool id / slot position of each kept
-    page, scratch-0-padded past counts); counts [B] int32 kept pages per
-    row; keep [B,mk,N,G] int32 per-query-head keep; kv_len [B] int32
-    valid KV extent (pos+1). Returns [B,N,G,hd] (head gate applied by
-    the caller). Pages absent from ``page_ids`` are never read.
+    """qq [B,N,G,Sq,hd] fixed-grid queries (Sq = 1 for plain decode, > 1
+    for the speculative multi-query verify); k/v_pool [P,ps,N,hd] page
+    pools; page_ids/logical [B,mk] int32 (pool id / slot position of each
+    kept page — the union over query rows, scratch-0-padded past counts);
+    counts [B] int32 kept pages per row; keep [B,mk,N,G,Sq] int32
+    per-query-row keep; kv_len [B] int32 valid KV extent of query row 0
+    (row j's extent is kv_len + j: verify rows are consecutive
+    positions). Returns [B,N,G,Sq,hd] (head gate applied by the caller).
+    Pages absent from ``page_ids`` are never read.
     """
-    B, N, G, hd = qq.shape
+    B, N, G, Sq, hd = qq.shape
     _, ps, _, _ = k_pool.shape
     mk = page_ids.shape[1]
     kernel = functools.partial(
         _kernel, scale=1.0 / (hd ** 0.5), approx=approx, int_bits=int_bits,
-        frac_bits=frac_bits, ps=ps, max_keep=mk)
+        frac_bits=frac_bits, ps=ps, max_keep=mk, n_q=Sq)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(B, N, mk),
         in_specs=[
-            pl.BlockSpec((1, 1, G, hd),
-                         lambda b, n, j, pid, lg, c, le: (b, n, 0, 0)),
+            pl.BlockSpec((1, 1, G, Sq, hd),
+                         lambda b, n, j, pid, lg, c, le: (b, n, 0, 0, 0)),
             pl.BlockSpec((1, ps, 1, hd),
                          lambda b, n, j, pid, lg, c, le: (pid[b, j], 0, n, 0)),
             pl.BlockSpec((1, ps, 1, hd),
                          lambda b, n, j, pid, lg, c, le: (pid[b, j], 0, n, 0)),
-            pl.BlockSpec((1, 1, 1, G),
-                         lambda b, n, j, pid, lg, c, le: (b, j, n, 0)),
+            pl.BlockSpec((1, 1, 1, G, Sq),
+                         lambda b, n, j, pid, lg, c, le: (b, j, n, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, hd),
-                               lambda b, n, j, pid, lg, c, le: (b, n, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, G, Sq, hd),
+                               lambda b, n, j, pid, lg, c, le: (b, n, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((G, hd), F32),
-            pltpu.VMEM((G, 1), F32),
-            pltpu.VMEM((G, 1), F32),
+            pltpu.VMEM((G * Sq, hd), F32),
+            pltpu.VMEM((G * Sq, 1), F32),
+            pltpu.VMEM((G * Sq, 1), F32),
         ],
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, N, G, hd), qq.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, N, G, Sq, hd), qq.dtype),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,

@@ -69,6 +69,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false",
                     help="force prefix caching off (the cold A/B leg)")
+    ap.add_argument("--spec-decode", dest="spec_decode",
+                    action="store_true", default=None,
+                    help="self-speculative decode: per round, draft-len-1 "
+                         "approximate draft steps (int8-scout attention) "
+                         "plus ONE multi-query verify over the serving "
+                         "cache; token-identical to plain greedy decode. "
+                         "Default honors REPRO_SPEC_DECODE, else off")
+    ap.add_argument("--no-spec-decode", dest="spec_decode",
+                    action="store_false",
+                    help="force speculative decode off (the A/B baseline)")
+    ap.add_argument("--draft-len", type=int, default=None,
+                    help="tokens proposed+verified per speculative round; "
+                         "default honors REPRO_DRAFT_LEN, else 4")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="give every synthetic prompt a common random "
                          "prefix of this many tokens (the prefix-cache "
@@ -106,7 +119,9 @@ def run(args) -> dict:
                  prefill_buckets=(16, 32, 64),
                  collect_stats=not args.no_hdp, attn=spec,
                  prefix_cache=args.prefix_cache,
-                 decode_horizon=args.decode_horizon)
+                 decode_horizon=args.decode_horizon,
+                 spec_decode=args.spec_decode,
+                 draft_len=args.draft_len)
     if getattr(args, "warmup", False):
         # one throwaway request compiles the prefill/decode jits (same
         # max_new as the real batch, so every fused-loop scan length the
@@ -158,7 +173,16 @@ def run(args) -> dict:
         "page_sparsity": round(s["page_sparsity"], 4),
         "cache_bytes": s["cache_bytes"],
         "tokens_fp": tokens_fp,
+        "spec_decode": s["spec_decode"],
     }
+    if s["spec_decode"]:
+        out.update(draft_len=s["draft_len"],
+                   spec_rounds=int(s["spec_rounds"]),
+                   draft_tokens=int(s["draft_tokens"]),
+                   accepted_tokens=int(s["accepted_tokens"]),
+                   acceptance_rate=round(s["acceptance_rate"], 4),
+                   attn_draft=s["attn_backend_draft"],
+                   attn_verify=s["attn_backend_verify"])
     if s["cache_backend"] == "paged":
         out["pages_peak"] = s["pages_peak"]
         out["pages_in_use"] = s["pages_in_use"]

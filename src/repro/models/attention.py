@@ -271,19 +271,45 @@ def hdp_prefill_attention(q, k, v, *, q_pos, k_pos, hdp: HDPConfig,
     return out.astype(q.dtype), stats
 
 
+def _expand_keep(keep, block_k, valid, ndim):
+    """[..., nk] or [..., Sq, nk] block keep -> element mask of `ndim` dims.
+
+    Pooled (decode) masks lack the query axis and broadcast over it;
+    per-query (verify) masks already carry Sq and expand in place."""
+    keep_e = jnp.repeat(keep, block_k, axis=-1)
+    if keep_e.ndim < ndim:
+        keep_e = keep_e[..., None, :]
+    return keep_e & valid
+
+
+def _head_gate(out, head_kept):
+    """Early head gate: pooled [...] or per-query [..., Sq] gates both
+    broadcast against [..., Sq, hd] by appending trailing axes."""
+    gate = head_kept
+    while gate.ndim < out.ndim:
+        gate = gate[..., None]
+    return out * gate.astype(out.dtype)
+
+
 def _approx_block_attention(qq, fq, kq, fk, v, keep, valid, head_kept, *,
-                            block_k, scale, approx):
+                            block_k, scale, approx, scores=None):
     """Shared decode stage: approximate scores (QK^T - FQ FK^T) on blocks
     surviving `keep`, exclusion softmax, early head gate.
 
     `scale` folds 1/sqrt(hd) and any calibration rescale; `block_k` is the
-    width the [..., nk] keep mask expands by to match the score columns."""
-    s = jnp.einsum("bngqh,bsnh->bngqs", qq, kq, preferred_element_type=F32)
-    if approx:
-        s = s - jnp.einsum("bngqh,bsnh->bngqs", fq, fk,
-                           preferred_element_type=F32)
+    width the [..., nk] keep mask expands by to match the score columns.
+    `scores` (pre-scale) overrides the QK^T - FQ FK^T computation — the
+    self-speculative draft hands its integer/scout scores in here."""
+    if scores is None:
+        s = jnp.einsum("bngqh,bsnh->bngqs", qq, kq,
+                       preferred_element_type=F32)
+        if approx:
+            s = s - jnp.einsum("bngqh,bsnh->bngqs", fq, fk,
+                               preferred_element_type=F32)
+    else:
+        s = scores
     s = s * scale
-    keep_e = jnp.repeat(keep, block_k, axis=-1)[..., None, :] & valid
+    keep_e = _expand_keep(keep, block_k, valid, s.ndim)
     s = jnp.where(keep_e, s, _NEG)
     mx = s.max(-1, keepdims=True)
     p = jnp.exp(s - mx)
@@ -291,7 +317,7 @@ def _approx_block_attention(qq, fq, kq, fk, v, keep, valid, head_kept, *,
     p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
     out = jnp.einsum("bngqs,bsnh->bngqh", p.astype(v.dtype), v,
                      preferred_element_type=F32)
-    return out * head_kept[..., None, None].astype(out.dtype)
+    return _head_gate(out, head_kept)
 
 
 def _block_sparsity_stats(keep, bvalid, head_kept):
@@ -309,11 +335,16 @@ def _block_sparsity_stats(keep, bvalid, head_kept):
 
 
 def hdp_decode_attention(q, k, v, *, q_pos, k_pos, hdp: HDPConfig,
-                         window: int = 0, return_stats: bool = False):
+                         window: int = 0, return_stats: bool = False,
+                         draft=None, per_query: bool = False):
     """KV-page pruning for decode (TPU adaptation, DESIGN.md §2).
 
     The integer scout reads K (int8-representable) once; pruned pages'
     V (and full-precision K) never need fetching — the memory-roofline win.
+
+    ``draft`` (a DraftProfile, thresholds already overlaid into ``hdp``)
+    switches the score source to the draft approximation; ``per_query``
+    runs the scout per query row (the multi-query verify shape).
     """
     B, N, G, Sq, hd = q.shape
     Sk = k.shape[1]
@@ -329,13 +360,30 @@ def hdp_decode_attention(q, k, v, *, q_pos, k_pos, hdp: HDPConfig,
 
     s_int = jnp.einsum("bngqh,bsnh->bngqs", iq, ik, preferred_element_type=F32)
     valid = _mask_bias(q_pos, kp, hdp.causal, window)
-    # the (small) query group is pooled into one block row per head
+    # the (small) query group is pooled into one block row per head —
+    # unless per_query, where each verify row scouts for itself
     keep, bvalid, theta, theta_head, head_kept = decode_scout(
-        s_int, valid, hdp)
+        s_int, valid, hdp, per_query=per_query)
+
+    scores = None
+    if draft is not None and draft.scores != "approx":
+        # draft scores from the scout copies: s_int alone ("int") or
+        # QQ·IK + IQ·FK^ ("scout"). The dense layout recomputes the
+        # copies per step (its cache holds full-precision K), but the
+        # *score* semantics — including FK's 2^-6 re-quantization — match
+        # the paged scout-pool draft bit for bit.
+        scores = s_int
+        if draft.scores == "scout":
+            fkh = jnp.round(fk * FRAC_SCOUT_SCALE) / FRAC_SCOUT_SCALE
+            scores = scores \
+                + jnp.einsum("bngqh,bsnh->bngqs", fq, ik,
+                             preferred_element_type=F32) \
+                + jnp.einsum("bngqh,bsnh->bngqs", iq, fkh,
+                             preferred_element_type=F32)
 
     out = _approx_block_attention(qq, fq, kq, fk, vp, keep, valid, head_kept,
                                   block_k=bk, scale=scale * score_rescale,
-                                  approx=hdp.approx)
+                                  approx=hdp.approx, scores=scores)
 
     stats = None
     if return_stats:
@@ -361,6 +409,45 @@ def scout_int8(k, hdp: HDPConfig):
     return _fixed_split(k, hdp)[1].astype(jnp.int8)
 
 
+#: grid of the quantized-fraction scout copy (2^6: fractions in (-1, 1)
+#: scale to +/-64, inside int8 range). Coarser than the cache's
+#: ``frac_bits`` on purpose — the draft only needs argmax-grade scores.
+FRAC_SCOUT_SCALE = 64.0
+
+
+def scout_frac_int8(k, hdp: HDPConfig):
+    """Write-time int8 quantized-fraction scout copy of K.
+
+    The self-speculative draft reconstructs near-exact approximate scores
+    from the two int8 copies alone (``QQ·IK + IQ·FK^``), so a draft step
+    never reads the full-precision K pool; stored only when the engine
+    speculates."""
+    return jnp.round(
+        _fixed_split(k, hdp)[2] * FRAC_SCOUT_SCALE).astype(jnp.int8)
+
+
+def resolve_write_pages(positions, page_table, page_size, write_floor=None):
+    """[B, S] write positions -> [B, S] destination pool page per write.
+
+    THE single implementation of the write-side position->page
+    resolution and its safety fences — the decode K/V scatter and the
+    speculative rollback poison must agree on it exactly:
+
+    * columns past the table width redirect to the scratch page
+      (speculative staging can run past the allocation near max_len);
+    * columns below the slot's ``write_floor`` redirect to the scratch
+      page (shared read-only prefix pages are immutable);
+    * unallocated columns are already 0 (scratch) in the table.
+    """
+    nP = page_table.shape[1]
+    pcol = positions // page_size
+    pidx = jnp.take_along_axis(page_table, jnp.minimum(pcol, nP - 1), axis=1)
+    pidx = jnp.where(pcol < nP, pidx, 0)
+    if write_floor is not None:
+        pidx = jnp.where(pcol >= write_floor[:, None], pidx, 0)
+    return pidx
+
+
 def _paged_scan_attention(qq, fq, k_pool, v_pool, gather_idx, keep, valid,
                           head_kept, *, hdp: HDPConfig, ps: int, cpp: int,
                           scale: float):
@@ -378,12 +465,13 @@ def _paged_scan_attention(qq, fq, k_pool, v_pool, gather_idx, keep, valid,
     pad = nc * cpp - nP
     Sk = nP * ps
     idx_p = jnp.pad(gather_idx, ((0, 0), (0, pad)))       # pads -> scratch
-    keep_p = jnp.pad(keep, ((0, 0),) * 3 + ((0, pad),))   # pads -> masked
+    keep_p = jnp.pad(keep, ((0, 0),) * (keep.ndim - 1) + ((0, pad),))
     valid_f = jnp.broadcast_to(valid, (B, 1, 1, Sq, Sk))
     valid_p = jnp.pad(valid_f, ((0, 0),) * 4 + ((0, pad * ps),))
 
     idx_c = jnp.moveaxis(idx_p.reshape(B, nc, cpp), 1, 0)
-    keep_c = jnp.moveaxis(keep_p.reshape(B, N, G, nc, cpp), 3, 0)
+    # keep is [B,N,G,nP] (pooled) or [B,N,G,Sq,nP] (per-query verify)
+    keep_c = jnp.moveaxis(keep_p.reshape(*keep.shape[:-1], nc, cpp), -2, 0)
     valid_c = jnp.moveaxis(
         valid_p.reshape(B, 1, 1, Sq, nc, cpp * ps), 4, 0)
 
@@ -403,7 +491,7 @@ def _paged_scan_attention(qq, fq, k_pool, v_pool, gather_idx, keep, valid,
             s = s - jnp.einsum("bngqh,bsnh->bngqs", fq, fk_i,
                                preferred_element_type=F32)
         s = s * scale
-        keep_e = jnp.repeat(keep_i, ps, axis=-1)[..., None, :] & valid_i
+        keep_e = _expand_keep(keep_i, ps, valid_i, s.ndim)
         s = jnp.where(keep_e, s, _NEG)
         m_new = jnp.maximum(m, s.max(-1))
         p = jnp.exp(s - m_new[..., None])
@@ -417,26 +505,30 @@ def _paged_scan_attention(qq, fq, k_pool, v_pool, gather_idx, keep, valid,
 
     (_, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (idx_c, keep_c, valid_c))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out * head_kept[..., None, None].astype(out.dtype)
+    return _head_gate(out, head_kept)
 
 
 def _paged_fum_kernel_stage3(qq, k_pool, v_pool, table, keep, head_kept,
-                             q_pos, *, hdp: HDPConfig, ps: int):
+                             q_pos, fetched, *, hdp: HDPConfig, ps: int):
     """Stage 2+3 through the gather-free Pallas kernel.
 
-    Compresses the OR-over-heads page fetch list to (pool page ids,
-    logical slot positions, counts) — the scalar-prefetch arrays whose
-    values drive the kernel's K/V BlockSpec index maps, so surviving
-    pages stream straight from the pool and pruned pages are never DMA'd
-    (no gathered intermediate at all).
+    Compresses the OR-over-heads (and, for multi-query verify, OR-over-
+    query-rows) page fetch list to (pool page ids, logical slot
+    positions, counts) — the scalar-prefetch arrays whose values drive
+    the kernel's K/V BlockSpec index maps, so surviving pages stream
+    straight from the pool and pruned pages are never DMA'd (no gathered
+    intermediate at all). A verify call streams each surviving page once
+    for ALL Sq query rows — the pool is read once per round.
     """
     from repro.kernels.hdp_paged_decode import hdp_paged_fum_decode
     from repro.kernels.ops import _auto_interpret
 
     B, N, G, Sq, hd = qq.shape
-    assert Sq == 1, "paged FUM kernel is a single-token decode stage"
     nP = table.shape[1]
-    fetched = (keep & head_kept[..., None]).any(axis=(1, 2))     # [B, nP]
+    # normalize to the per-query-row shapes the kernel consumes (pooled
+    # decode masks broadcast over the single query row)
+    keep_q = keep if keep.ndim == 5 else keep[..., None, :]
+    keep_q = jnp.broadcast_to(keep_q, (B, N, G, Sq, nP))
     # kept pages in ascending logical order (monotone pool DMA), padded
     # with the scratch page past each row's count
     big = jnp.iinfo(jnp.int32).max
@@ -447,21 +539,24 @@ def _paged_fum_kernel_stage3(qq, k_pool, v_pool, table, keep, head_kept,
     logical = jnp.where(in_range, logical, 0)
     page_ids = jnp.where(in_range,
                          jnp.take_along_axis(table, logical, axis=1), 0)
-    keep_sel = jnp.take_along_axis(keep, logical[:, None, None, :], axis=-1)
-    keep_in = keep_sel.transpose(0, 3, 1, 2).astype(jnp.int32)   # [B,nP,N,G]
-    kv_len = (q_pos.reshape(B, Sq)[:, -1] + 1).astype(jnp.int32)
+    keep_sel = jnp.take_along_axis(
+        keep_q, logical[:, None, None, None, :], axis=-1)
+    keep_in = keep_sel.transpose(0, 4, 1, 2, 3).astype(jnp.int32)
+    # row 0's extent; the kernel adds the query index (consecutive rows)
+    kv_len = (q_pos.reshape(B, Sq)[:, 0] + 1).astype(jnp.int32)
     out = hdp_paged_fum_decode(
-        qq.reshape(B, N, G, hd), k_pool, v_pool, page_ids, logical, counts,
+        qq, k_pool, v_pool, page_ids, logical, counts,
         keep_in, kv_len, approx=hdp.approx, int_bits=hdp.int_bits,
         frac_bits=hdp.frac_bits, interpret=_auto_interpret(None))
-    out = out.reshape(B, N, G, Sq, hd)
-    return out * head_kept[..., None, None].astype(out.dtype)
+    return _head_gate(out, head_kept)
 
 
 def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
                                q_pos, k_pos, hdp: HDPConfig, window: int = 0,
                                return_stats: bool = False,
-                               stage3: str = "xla", page_chunk: int = 128):
+                               stage3: str = "xla", page_chunk: int = 128,
+                               draft=None, per_query: bool = False,
+                               fk_pool=None):
     """HDP decode over a block-paged KV cache — the FUM dataflow in XLA.
 
     q [B,N,G,Sq,hd]; k/v_pool [P,ps,N,hd] page pools (page 0 is the
@@ -488,6 +583,14 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
       page ids index the pool directly (interpret mode off-TPU).
     * ``"pallas_block"`` — the block-sparse kernel on a densified gather
       (the pre-kernel route, kept for the conformance matrix).
+
+    ``per_query`` runs the scout per query row (the multi-query verify
+    shape: each of the Sq rows computes the keep mask / head gate its own
+    single-token step would); ``draft`` (a DraftProfile — thresholds
+    already overlaid into ``hdp``) switches stage 3 to the draft score
+    source, under which the full-precision K pool is NEVER read: the
+    scores come from the int8 scout copy stage 1 streams anyway, and only
+    surviving pages' V is fetched.
     """
     B, N, G, Sq, hd = q.shape
     P, ps, _, _ = k_pool.shape
@@ -501,22 +604,59 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
     s_int = jnp.einsum("bngqh,bsnh->bngqs", iq, ik, preferred_element_type=F32)
     valid = _mask_bias(q_pos, k_pos, hdp.causal, window)
     keep, bvalid, theta, theta_head, head_kept = decode_scout(
-        s_int, valid, hdp)
+        s_int, valid, hdp, per_query=per_query)
 
     # ---- stage 2: fetch-upon-mask page selection ----
-    # page fetch granularity is OR-over-heads (a page holds all kv heads);
-    # the per-head keep mask still applies inside the softmax below. Early
-    # head-gated heads (output zeroed) don't demand their pages at all.
-    fetched = (keep & head_kept[..., None]).any(axis=(1, 2))  # [B, nP]
+    # page fetch granularity is OR-over-heads (a page holds all kv heads)
+    # and, under multi-query verify, OR-over-query-rows (the pool is read
+    # once per round); the per-head/per-row keep mask still applies inside
+    # the softmax below. Early head-gated heads (output zeroed) don't
+    # demand their pages at all.
+    fetched = (keep & head_kept[..., None]).any(
+        axis=tuple(range(1, keep.ndim - 1)))                  # [B, nP]
 
     if stage3 != "xla" and window:
         # the kernels' per-row validity is an upper bound (cols < kv_len)
         # and cannot express the sliding-window lower bound; fall back to
         # the jnp path rather than silently attending out-of-window keys
         stage3 = "xla"
-    if stage3 == "pallas_paged":
+    if stage3 == "pallas_block" and per_query:
+        # the densifying block kernel's reshapes are Sq-unaware; fall
+        # back like the windowed case instead of crashing a direct
+        # conformance call (registry dispatch never routes verify here)
+        stage3 = "xla"
+    if draft is not None and draft.scores != "approx":
+        # draft stage 3: scores from the int8 scout copies — s_int alone
+        # ("int") or QQ·IK + IQ·FK^ ("scout": the quantized-fraction copy
+        # recovers the exact pass's scores to within its 2^-6 grid);
+        # k_pool is never touched, and V is gathered only for surviving
+        # pages (scratch-redirect)
+        s = s_int
+        if draft.scores == "scout":
+            if fk_pool is None:
+                # the IQ·FK^ term cannot be derived without reading the
+                # full-precision pool — which is exactly what this score
+                # mode promises never to do; surface the misuse instead
+                # of silently serving lower-fidelity drafts
+                raise ValueError(
+                    'draft scores="scout" needs the f_scout pool '
+                    "(PagedKVCache(draft_scout=True)); pass fk_pool or "
+                    'use scores="int"')
+            fkh = fk_pool[table].reshape(B, Sk, N, hd).astype(F32) \
+                / FRAC_SCOUT_SCALE
+            s = s + jnp.einsum("bngqh,bsnh->bngqs", fq, ik,
+                               preferred_element_type=F32) \
+                  + jnp.einsum("bngqh,bsnh->bngqs", iq, fkh,
+                               preferred_element_type=F32)
+        gather_idx = jnp.where(fetched, table, 0)         # pruned -> scratch
+        v = v_pool[gather_idx].reshape(B, Sk, N, hd)
+        out = _approx_block_attention(None, None, None, None, v, keep, valid,
+                                      head_kept, block_k=ps, scale=scale,
+                                      approx=False, scores=s)
+    elif stage3 == "pallas_paged":
         out = _paged_fum_kernel_stage3(qq, k_pool, v_pool, table, keep,
-                                       head_kept, q_pos, hdp=hdp, ps=ps)
+                                       head_kept, q_pos, fetched,
+                                       hdp=hdp, ps=ps)
     elif stage3 == "pallas_block":
         from repro.kernels.hdp_block_attn import hdp_block_sparse_attention
         from repro.kernels.ops import _auto_interpret
@@ -577,37 +717,49 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
 def build_attn_call(cfg, *, mode: str, paged: bool = False,
                     per_slot: bool = False, self_aligned: bool = False,
                     cross: bool = False, causal: bool = True,
-                    collect_stats: bool = False) -> AttnCall:
+                    collect_stats: bool = False, draft=None,
+                    verify: bool = False) -> AttnCall:
     """Construct the AttnCall `attn_apply` dispatches on.
 
     One place derives the static call descriptor from the model config and
     invocation shape — `attn_apply` uses it for dispatch, and the serving
     engine uses the SAME function to report the resolved backend per
     phase, so the report cannot drift from the dispatch.
+
+    ``draft`` (a DraftProfile) marks a self-speculative draft step: its
+    threshold overrides are folded into the call's HDP config here, so
+    backends see exactly the grid the draft attends with. ``verify``
+    marks a multi-query verify call (Sq > 1 decode — per-query-row scout
+    semantics required of HDP backends).
     """
     hdp = cfg.hdp
     use_hdp = (hdp is not None and hdp.enabled
                and (mode != "train" or hdp.apply_in_training))
     eff_causal = causal and not cross
     window = 0 if cross else cfg.sliding_window
+    hdp_eff = hdp.replace(causal=eff_causal) if use_hdp else None
+    if draft is not None and hdp_eff is not None:
+        hdp_eff = draft.overlay(hdp_eff)
     return AttnCall(
         mode="decode" if mode == "decode" else "prefill",
         layout="paged" if paged else "dense",
         causal=eff_causal,
         window=window,
-        hdp=hdp.replace(causal=eff_causal) if use_hdp else None,
+        hdp=hdp_eff,
         per_slot=per_slot,
         self_aligned=self_aligned,
         trainable=mode == "train",
         chunk=cfg.attn_chunk,
         needs_stats=collect_stats,
+        draft=draft if use_hdp else None,
+        verify=verify and mode == "decode",
     )
 
 
 def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
                enc_out=None, causal: bool = True, static_cache: bool = False,
                collect_stats: bool = False, page_table=None,
-               write_floor=None,
+               write_floor=None, draft=None,
                attn: Optional[AttnSpec] = None) -> Tuple[Any, Any, Any]:
     """Full MHA layer: project, rope, (HDP-)attend, output-project.
 
@@ -619,11 +771,17 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
     decode write whose page column sits below the floor would land in a
     *shared read-only* prefix page and is redirected to the scratch page
     instead (the prefix cache's immutability fence; the engine's COW
-    keeps the fence un-hit in normal operation). attn: backend
-    selection spec (None -> the default spec, which honors the
+    keeps the fence un-hit in normal operation). draft: DraftProfile of a
+    self-speculative draft step (None for full-fidelity calls). attn:
+    backend selection spec (None -> the default spec, which honors the
     REPRO_ATTN_BACKEND env var); the attention maths itself is dispatched
     through ``repro.attention.attention`` on an AttnCall descriptor.
     Returns (y, new_cache, stats|None).
+
+    Decode calls with S > 1 are multi-query *verify* calls (speculative
+    decode): ``positions[:, j]`` must be consecutive per slot, every row's
+    K/V is scattered into the cache before attention reads it, and HDP
+    backends run their scout per query row.
 
     NOTE (perf log B3): writing K/V into the *stacked* [L,B,S,N,hd] cache
     before reading (to dodge the per-layer carry copy) was measured and
@@ -663,31 +821,40 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
             k = L.apply_rope(k, positions, cfg.rope_theta)
 
         if cache is not None and "k_pages" in cache:
-            # block-paged serving cache (decode only): scatter the token's
-            # K/V (+ int8 scout copy) into its slot's current page, then
-            # attend over the page pool through the page table.
+            # block-paged serving cache (decode only): scatter the S
+            # tokens' K/V (+ int8 scout copy) into their slots' pages
+            # (S > 1 = speculative verify — one scatter, then one
+            # attention over the pool), then attend through the table.
             assert mode == "decode" and positions.ndim == 2, \
                 "paged cache is a decode-time serving layout"
             ps = cache["k_pages"].shape[1]
-            pos0 = positions[:, 0]
-            pcol = pos0 // ps
-            pidx = jnp.take_along_axis(page_table, pcol[:, None], axis=1)[:, 0]
-            if write_floor is not None:
-                # shared read-only prefix pages are below the slot's write
-                # floor: never write them, scratch absorbs the (redundant)
-                # update instead
-                pidx = jnp.where(pcol >= write_floor, pidx, 0)
-            off = pos0 % ps
+            nP = page_table.shape[1]
+            pidx = resolve_write_pages(positions, page_table, ps,
+                                       write_floor)
+            off = positions % ps
             new_cache = {
                 "k_pages": cache["k_pages"].at[pidx, off].set(
-                    k[:, 0].astype(cache["k_pages"].dtype)),
+                    k.astype(cache["k_pages"].dtype)),
                 "v_pages": cache["v_pages"].at[pidx, off].set(
-                    v[:, 0].astype(cache["v_pages"].dtype)),
+                    v.astype(cache["v_pages"].dtype)),
             }
+            if draft is not None and draft.scores != "approx" \
+                    and cfg.hdp is not None and cfg.hdp.enabled:
+                # a scout-scores draft neither reads nor needs the
+                # full-precision K it would stage: later draft steps
+                # score against the scout copies, and the verify rewrites
+                # every staged position with exact K before anything else
+                # can read it — skip the dead scatter. Gated on HDP like
+                # the call descriptor (build_attn_call nulls draft
+                # without a scout): the HDP-off degraded draft runs
+                # exact attention and DOES read this K
+                new_cache["k_pages"] = cache["k_pages"]
             if "k_scout" in cache:
                 new_cache["k_scout"] = cache["k_scout"].at[pidx, off].set(
-                    scout_int8(k[:, 0], cfg.hdp))
-            nP = page_table.shape[1]
+                    scout_int8(k, cfg.hdp))
+            if "f_scout" in cache:
+                new_cache["f_scout"] = cache["f_scout"].at[pidx, off].set(
+                    scout_frac_int8(k, cfg.hdp))
             ar = jnp.arange(nP * ps)
             k_pos = jnp.where(ar[None, :] <= positions[:, -1:], ar, -1)
             k_pos = k_pos[:, None, None, :]              # [B,1,1,nP*ps]
@@ -734,7 +901,9 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
     call = build_attn_call(
         cfg, mode=mode, paged=paged, per_slot=positions.ndim == 2,
         self_aligned=(cache is None and not is_cross and positions.ndim == 1),
-        cross=is_cross, causal=causal, collect_stats=collect_stats)
+        cross=is_cross, causal=causal, collect_stats=collect_stats,
+        draft=draft if mode == "decode" else None,
+        verify=mode == "decode" and S > 1 and not is_cross)
     o, stats = attention(
         qg, k_full, v_full, call, spec=attn, q_pos=q_pos, k_pos=k_pos,
         cache=new_cache if paged else None, page_table=page_table)

@@ -47,12 +47,12 @@ def init_params(cfg, rng) -> Tuple[Dict, Dict]:
 
 
 def _block(cfg, lp, x, *, mode, positions, cache, collect_stats,
-           page_table=None, write_floor=None, attn=None):
+           page_table=None, write_floor=None, attn=None, draft=None):
     h = L.apply_norm(cfg, lp["ln1"], x)
     a, new_cache, stats = attn_apply(
         cfg, lp["attn"], h, mode=mode, positions=positions, cache=cache,
         collect_stats=collect_stats, page_table=page_table,
-        write_floor=write_floor, attn=attn)
+        write_floor=write_floor, attn=attn, draft=draft)
     x = x + a
     h = L.apply_norm(cfg, lp["ln2"], x)
     if cfg.n_experts:
@@ -63,7 +63,7 @@ def _block(cfg, lp, x, *, mode, positions, cache, collect_stats,
 
 
 def _stack(cfg, params, x, *, mode, positions, cache, collect_stats,
-           page_table=None, write_floor=None, attn=None):
+           page_table=None, write_floor=None, attn=None, draft=None):
     """lax.scan over stacked layers; returns (x, new_cache, stats, aux).
 
     The KV cache rides in the scan CARRY with per-layer in-place
@@ -92,7 +92,8 @@ def _stack(cfg, params, x, *, mode, positions, cache, collect_stats,
         y, nc, st, aux = _block(cfg, lp, y, mode=mode, positions=positions,
                                 cache=lc, collect_stats=collect_stats,
                                 page_table=page_table,
-                                write_floor=write_floor, attn=attn)
+                                write_floor=write_floor, attn=attn,
+                                draft=draft)
         cache_all = jax.tree.map(
             lambda c, n: jax.lax.dynamic_update_index_in_dim(
                 c, n.astype(c.dtype), li, 0),
@@ -156,22 +157,30 @@ def apply_prefill(cfg, params, batch, cache, *, collect_stats: bool = False,
 
 
 def apply_decode(cfg, params, token, cache, pos, *, collect_stats: bool = False,
-                 page_table=None, write_floor=None, attn=None):
+                 page_table=None, write_floor=None, attn=None, draft=None):
     """One decode step. token [B,1]; pos scalar int32 (aligned batch).
 
     page_table [B, nP] routes the step through the block-paged serving
     cache ({"k_pages","v_pages"[,"k_scout"]} leaves) instead of the dense
     contiguous layout. write_floor [B] fences each slot's shared
-    read-only prefix pages from the K/V write (see attn_apply)."""
+    read-only prefix pages from the K/V write (see attn_apply).
+
+    token [B, S] with S > 1 is the speculative multi-query *verify*
+    shape: ``pos`` must then be [B, S] consecutive positions per slot —
+    all S rows are scored against the cache in one call, with per-row
+    scout semantics identical to S sequential steps. draft: DraftProfile
+    marking a self-speculative draft step (approximate attention)."""
     x = L.embed_tokens(params["embed"], token, cfg.d_model)
     if cfg.pos_emb == "sinusoidal":
-        x = x + L.sinusoidal_pos(1, cfg.d_model, offset=pos).astype(x.dtype)
+        x = x + L.sinusoidal_pos(token.shape[1], cfg.d_model,
+                                 offset=pos).astype(x.dtype)
     positions = pos[None] if jnp.ndim(pos) == 0 else pos
     x, new_cache, stats, _ = _stack(cfg, params, x, mode="decode",
                                     positions=positions, cache=cache,
                                     collect_stats=collect_stats,
                                     page_table=page_table,
-                                    write_floor=write_floor, attn=attn)
+                                    write_floor=write_floor, attn=attn,
+                                    draft=draft)
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = L.lm_logits(params["embed"], x)
     return logits, new_cache, stats

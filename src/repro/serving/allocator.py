@@ -198,13 +198,22 @@ class RadixPrefixCache:
         ``pages[i]`` must hold the K/V of tokens ``[i*ps, (i+1)*ps)`` and
         must never be written again by its owner (the engine guarantees
         this by only registering pages strictly before the decode write
-        frontier). Returns the number of newly-cached pages.
+        frontier — with speculative decode, strictly before the *commit*
+        frontier, so staged/rolled-back positions can never be cached).
+        Returns the number of newly-cached pages.
         """
         self._clock += 1
         node, added = self._root, 0
         for i, chunk in enumerate(self._chunks(tokens)):
             if i >= len(pages):
                 break
+            if pages[i] < self.alloc.reserved:
+                # a reserved (scratch) id here means the caller handed a
+                # write-redirected page to the cache — sharing it would
+                # serve arbitrary staging garbage as prompt K/V
+                raise ValueError(
+                    f"cannot register reserved page {pages[i]} as a "
+                    "prompt prefix")
             child = node.children.get(chunk)
             if child is None:
                 child = _Node(chunk, pages[i], node)

@@ -53,6 +53,22 @@ step, and decode runs a jitted ``lax.scan`` over a configurable horizon
 one host sync per H tokens with on-device EOS/budget masking, token-
 identical to per-token stepping.
 
+With **self-speculative decode** (``spec_decode`` /
+``REPRO_SPEC_DECODE``; supersedes the horizon loop) each step is one
+fused draft/verify round instead: ``draft_len - 1`` approximate draft
+steps propose tokens by scoring attention from the int8 scout copies
+alone (the always-streamed integer copy plus a write-time
+quantized-fraction copy — the full-precision K pool is neither read nor
+written by a draft step), then ONE ``draft_len``-wide multi-query verify
+re-scores every position with full fidelity and per-query-row scout
+semantics, reading the page pool once per round instead of once per
+token. On-device longest-prefix acceptance commits only exact greedy
+tokens (byte-identical to horizon-1 at any acceptance rate), EOS/budget
+cuts mirror the horizon loop, and rejected staged writes past the new
+frontier are rolled back by NaN-poisoning their K — the write floor
+keeps shared prefix pages outside both staging and rollback, so the
+allocator/prefix-cache invariants are untouched.
+
 HDP is active inside both prefill and decode attention when
 ``cfg.hdp.enabled`` — stats (block/head/page sparsity per layer) are
 aggregated into engine metrics so serving examples/benchmarks can report
@@ -77,8 +93,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.attention import (AttnSpec, default_spec, known_backend_names,
-                             resolve_backend, spec_from_legacy)
+from repro.attention import (AttnSpec, DraftProfile, default_spec,
+                             known_backend_names, resolve_backend,
+                             spec_from_legacy)
 from repro.configs.base import ModelConfig
 from repro.models import registry
 from repro.models.attention import build_attn_call
@@ -96,6 +113,14 @@ HORIZON_ENV = "REPRO_DECODE_HORIZON"
 #: env var enabling prompt-prefix page sharing when ``prefix_cache=None``
 #: is passed (explicit kwargs win; ignored for layouts that cannot share).
 PREFIX_ENV = "REPRO_PREFIX_CACHE"
+
+#: env var enabling self-speculative decode when ``spec_decode=None`` is
+#: passed (explicit kwargs win; degrades silently for families that
+#: cannot speculate — recurrent state has no multi-query verify).
+SPEC_ENV = "REPRO_SPEC_DECODE"
+
+#: env var giving the default draft length (explicit kwargs win).
+DRAFT_ENV = "REPRO_DRAFT_LEN"
 
 
 @dataclasses.dataclass
@@ -155,6 +180,28 @@ class Engine:
         never runs steps that provably have no active slot. None reads
         ``REPRO_DECODE_HORIZON`` (default 1). Admission (slot refill)
         happens at horizon boundaries.
+    spec_decode: self-speculative decode — each engine step runs ONE
+        fused round of ``draft_len - 1`` approximate draft steps (the
+        draft profile's cheap attention proposes tokens) plus one
+        ``draft_len``-wide multi-query verify over the serving cache
+        (the page pool is read once per round instead of once per
+        token), with on-device longest-prefix accept, EOS/budget cuts
+        and NaN-poison rollback of rejected speculative K writes.
+        Exact-match acceptance makes the output token-identical to
+        horizon-1 greedy decode, at any acceptance rate. Supersedes the
+        ``decode_horizon`` loop when enabled. None reads
+        ``REPRO_SPEC_DECODE`` and degrades silently for families whose
+        cache cannot verify (recurrent state); passing True explicitly
+        raises instead. Pins ``hdp.calib = "none"`` like the paged
+        layout does: speculative staging leaves garbage past the commit
+        frontier, which a data-dependent calibration scale would see.
+    draft_len: tokens proposed+verified per speculative round (the
+        verify width; committed tokens per round are 1..draft_len).
+        None reads ``REPRO_DRAFT_LEN`` (default 4).
+    draft_profile: DraftProfile selecting the draft pass's approximate
+        attention (score source + survival-threshold overrides); None
+        uses the default profile (scout-copy scores, exact-pass
+        thresholds).
     """
 
     def __init__(self, cfg: ModelConfig, params=None, *, rng=None,
@@ -167,7 +214,10 @@ class Engine:
                  page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
                  prefix_cache: Optional[bool] = None,
-                 decode_horizon: Optional[int] = None):
+                 decode_horizon: Optional[int] = None,
+                 spec_decode: Optional[bool] = None,
+                 draft_len: Optional[int] = None,
+                 draft_profile: Optional[DraftProfile] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "enc-dec serving uses launch/serve.py --arch whisper path")
@@ -195,6 +245,33 @@ class Engine:
             # alike so the engine stays self-consistent (and identical to
             # the dense backend under the same effective config)
             cfg = cfg.replace(hdp=cfg.hdp.replace(calib="none"))
+        spec_capable = cfg.family in PAGEABLE_FAMILIES
+        if spec_decode is None:
+            env = os.environ.get(SPEC_ENV, "")
+            spec_decode = env.lower() in ("1", "true", "on") if env else False
+            spec_decode = spec_decode and spec_capable   # env default degrades
+        elif spec_decode and not spec_capable:
+            raise ValueError(
+                f"spec_decode=True: family {cfg.family!r} has no multi-query "
+                "verify path (recurrent state cannot re-score draft "
+                "positions against a cache)")
+        self.spec = bool(spec_decode)
+        if draft_len is None:
+            draft_len = int(os.environ.get(DRAFT_ENV, "4") or 4)
+        if draft_len < 1:
+            raise ValueError(f"draft_len must be >= 1, got {draft_len}")
+        self.draft_len = int(draft_len)
+        self.draft_profile = draft_profile if draft_profile is not None \
+            else DraftProfile()
+        if (self.spec and layout != "paged" and cfg.hdp is not None
+                and cfg.hdp.enabled and cfg.hdp.calib != "none"):
+            # the paged pinning above, for the same reason seen from the
+            # other side: rejected speculative writes leave garbage (or
+            # rollback poison) past the commit frontier, which a
+            # data-dependent calibration scale computed over the cache
+            # extent would observe — breaking token identity with the
+            # non-speculative baseline
+            cfg = cfg.replace(hdp=cfg.hdp.replace(calib="none"))
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
@@ -215,11 +292,23 @@ class Engine:
         self.params = params
 
         if self.paged:
-            self.pages = kv_cache.PagedKVCache(cfg, max_batch, max_len,
-                                               page_size=page_size,
-                                               num_pages=num_pages)
+            self.pages = kv_cache.PagedKVCache(
+                cfg, max_batch, max_len, page_size=page_size,
+                num_pages=num_pages,
+                # the draft's scores come from the int8 scout copies; the
+                # quantized-fraction copy is only worth pool memory when
+                # the engine actually speculates with scout-copy scores
+                draft_scout=self.spec and self.draft_profile.scores == "scout")
         else:
-            self.slots = kv_cache.SlotCache(cfg, max_batch, max_len)
+            # speculative rounds stage writes up to draft_len - 1 positions
+            # past the commit frontier before rolling back; the dense slot
+            # cache carries that margin so staged writes near max_len can
+            # never clamp onto (and corrupt) committed positions. The
+            # positions are causally invisible until rewritten, exactly
+            # like bucket padding. (The paged layout needs no margin: its
+            # write path scratch-redirects past-the-table columns.)
+            margin = self.draft_len - 1 if self.spec else 0
+            self.slots = kv_cache.SlotCache(cfg, max_batch, max_len + margin)
         self.prefix = self._build_prefix_cache(prefix_cache)
         self._free = list(range(max_batch))
         self._active: Dict[int, Dict[str, Any]] = {}  # slot -> request state
@@ -253,6 +342,10 @@ class Engine:
         self._decode_jit = jax.jit(
             self._decode_loop_paged_fn if self.paged
             else self._decode_loop_dense_fn,
+            static_argnums=(0,), donate_argnums=(3,))
+        self._spec_jit = jax.jit(
+            self._spec_round_paged_fn if self.paged
+            else self._spec_round_dense_fn,
             static_argnums=(0,), donate_argnums=(3,))
 
     # ------------------------------------------------------------ prefix cache
@@ -379,6 +472,150 @@ class Engine:
                               remaining, eos):
         return self._decode_loop(length, params, tok, cache, None, None,
                                  pos, active, remaining, eos)
+
+    # ------------------------------------------------------ speculative round
+    def _draft_step(self, params, token, cache, pos, table, floors):
+        """One approximate draft decode step (cheap attention per the
+        engine's DraftProfile; never collects stats)."""
+        kw = {"page_table": table, "write_floor": floors} \
+            if table is not None else {}
+        logits, new_cache, _ = registry.apply_decode(
+            self.cfg, params, token, cache, pos[:, None],
+            collect_stats=False, attn=self.attn_spec,
+            draft=self.draft_profile, **kw)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(I32)[:, None]
+        return nxt, new_cache
+
+    def _verify_step(self, params, tokens, cache, pos_rows, table, floors):
+        """One k-wide multi-query verify: all k positions re-scored (and
+        their exact K/V re-written, overwriting the draft's staging) in a
+        single batched attention call over the serving cache."""
+        kw = {"page_table": table, "write_floor": floors} \
+            if table is not None else {}
+        logits, new_cache, stats = registry.apply_decode(
+            self.cfg, params, tokens, cache, pos_rows,
+            collect_stats=self.collect_stats, attn=self.attn_spec, **kw)
+        return jnp.argmax(logits, axis=-1).astype(I32), new_cache, stats
+
+    def _poison_rejected(self, cache, table_eff, floors, pos, n_commit,
+                         active, k):
+        """Rollback fence: NaN-poison the K of rejected speculative writes.
+
+        Positions ``pos + n_commit .. pos + k - 1`` hold K/V of tokens
+        the verify refuted; by construction they are rewritten before any
+        masked read can see them, and this poison makes that invariant
+        self-enforcing — a stale read would surface as NaN in the logits
+        instead of a silent wrong token. K-only, like the allocator's
+        freed-page poison: masked V reads still multiply by exact zeros.
+        Sub-floor (shared, read-only) pages are never poisoned — the
+        write fences are the SAME the K/V scatter honors
+        (models.attention.resolve_write_pages).
+
+        The gather-then-writeback shape is load-bearing, not a missed
+        optimization: non-rejected lanes must NOT be redirected into the
+        scratch page, because scratch K is subject to the pool-wide
+        arbitrary-but-FINITE contract — an early-head-gated head's pages
+        are never fetched (gathers read scratch in their place) while
+        its softmax still runs before the gate zeroes the output, so
+        NaN in scratch K becomes NaN * 0 = NaN in the head gate and
+        poisons every downstream activation."""
+        from repro.models.attention import resolve_write_pages
+        steps = jnp.arange(k, dtype=I32)
+        stale = pos[:, None] + steps[None]                  # [B, k]
+        reject = active[:, None] & (steps[None] >= n_commit[:, None])
+        if self.paged:
+            ps = self.pages.page_size
+            ent = resolve_write_pages(stale, table_eff, ps, floors)
+            reject = reject & (ent != 0)     # never poison the scratch page
+            off = stale % ps
+            kp = cache["k_pages"]                           # [L, P, ps, N, hd]
+            cur = kp[:, ent, off]                           # [L, B, k, N, hd]
+            val = jnp.where(reject[None, :, :, None, None],
+                            jnp.asarray(jnp.nan, cur.dtype), cur)
+            return {**cache, "k_pages": kp.at[:, ent, off].set(val)}
+        kc = cache["k"]                                     # [L, B, S, N, hd]
+        b = jnp.arange(kc.shape[1])[:, None]
+        cur = kc[:, b, stale]                               # [L, B, k, N, hd]
+        val = jnp.where(reject[None, :, :, None, None],
+                        jnp.asarray(jnp.nan, cur.dtype), cur)
+        return {**cache, "k": kc.at[:, b, stale].set(val)}
+
+    def _spec_round(self, k, params, tok, cache, table, floors, pos,
+                    active, remaining, eos):
+        """One fused self-speculative round (``k`` = draft_len, static).
+
+        Draft: ``k - 1`` sequential decode steps under the draft profile
+        propose d_1..d_{k-1} (staged K/V writes ride the normal write
+        path, floor-fenced). Verify: ONE ``k``-wide multi-query decode
+        over [last_committed, d_1..d_{k-1}] re-scores every position with
+        full fidelity — its exact K/V writes overwrite the draft staging
+        — and yields the exact greedy token e_j per row. Accept: commit
+        e_1..e_m where m-1 is the longest prefix with d_j == e_j; every
+        committed token is an *exact* greedy token, so the output is
+        token-identical to non-speculative decode at any acceptance rate.
+        EOS and budget cut commits exactly like the fused horizon loop;
+        rejected staged writes past the new frontier are NaN-poisoned.
+
+        Emits (exact tokens [k, B], commit mask [k, B], verify stats) +
+        the updated carry — one host sync per round.
+        """
+        table_eff = (None if table is None
+                     else jnp.where(active[:, None], table, 0))
+
+        if k > 1:
+            def body(carry, _):
+                tok_i, cache_i, pos_i = carry
+                nxt, cache_i = self._draft_step(params, tok_i, cache_i,
+                                                pos_i, table_eff, floors)
+                return (nxt, cache_i, pos_i + 1), nxt[:, 0]
+
+            (_, cache, _), ds = jax.lax.scan(
+                body, (tok, cache, pos), None, length=k - 1)
+            drafts = jnp.moveaxis(ds, 0, 1)                 # [B, k-1]
+        else:
+            drafts = jnp.zeros((tok.shape[0], 0), I32)
+
+        ver_in = jnp.concatenate([tok, drafts], axis=1)     # [B, k]
+        steps = jnp.arange(k, dtype=I32)
+        ver_pos = pos[:, None] + steps[None]                # [B, k]
+        exact, cache, stats = self._verify_step(
+            params, ver_in, cache, ver_pos, table_eff, floors)
+
+        # longest accepted prefix: drafts[:, j] proposed the token the
+        # verify re-derived as exact[:, j]; the first mismatch still
+        # commits the exact token (the "free" correction)
+        lead = jnp.cumprod((drafts == exact[:, :k - 1]).astype(I32), axis=1)
+        n_best = 1 + lead.sum(axis=1)                       # [B] in [1, k]
+        within = steps[None] < n_best[:, None]
+        is_eos = (eos[:, None] >= 0) & (exact == eos[:, None])
+        cut = (is_eos & within).astype(I32)
+        eos_before = jnp.cumsum(cut, axis=1) - cut          # EOS strictly before
+        commit = (within & (eos_before == 0)
+                  & (steps[None] < remaining[:, None]) & active[:, None])
+        n_commit = commit.sum(axis=1).astype(I32)
+
+        cache = self._poison_rejected(cache, table_eff, floors, pos,
+                                      n_commit, active, k)
+        eos_hit = (is_eos & commit).any(axis=1)
+        remaining = remaining - n_commit
+        done = active & (eos_hit | (remaining <= 0))
+        new_active = active & ~done
+        last = jnp.take_along_axis(
+            exact, jnp.maximum(n_commit - 1, 0)[:, None], axis=1)
+        tok = jnp.where(new_active[:, None], last, 0)
+        pos = jnp.where(new_active, pos + n_commit, 0)
+        return ((exact.T, commit.T, stats), tok, cache, pos, new_active,
+                remaining)
+
+    def _spec_round_paged_fn(self, k, params, tok, cache, table, floors,
+                             pos, active, remaining, eos):
+        return self._spec_round(k, params, tok, cache, table, floors, pos,
+                                active, remaining, eos)
+
+    def _spec_round_dense_fn(self, k, params, tok, cache, pos, active,
+                             remaining, eos):
+        return self._spec_round(k, params, tok, cache, None, None, pos,
+                                active, remaining, eos)
 
     # --------------------------------------------------------------- public
     def submit(self, req: Request) -> None:
@@ -745,7 +982,8 @@ class Engine:
                 "decode_s": 0.0, "decode_steps": 0, "tokens_out": 0,
                 "block_sparsity": 0.0, "head_sparsity": 0.0,
                 "page_sparsity": 0.0, "stat_samples": 0, "page_samples": 0,
-                "cow_copies": 0}
+                "cow_copies": 0, "spec_rounds": 0, "draft_tokens": 0,
+                "accepted_tokens": 0}
 
     def reset_metrics(self) -> None:
         """Zero the aggregated serving metrics (e.g. after a warmup pass,
@@ -811,17 +1049,20 @@ class Engine:
         self._free.append(slot)
 
     def step(self) -> int:
-        """One engine iteration: admit + one fused decode horizon.
+        """One engine iteration: admit + one fused decode horizon (or,
+        with ``spec_decode``, one fused self-speculative round).
 
-        Generates up to ``horizon`` tokens per active slot in a single
-        jitted call (one host sync per horizon); the serving cache is
-        donated to the call, so page-pool updates are in place rather
-        than a fresh copy per step. Returns the number of active slots
-        stepped."""
+        Generates up to ``horizon`` (``draft_len``) tokens per active
+        slot in a single jitted call (one host sync per horizon/round);
+        the serving cache is donated to the call, so page-pool updates
+        are in place rather than a fresh copy per step. Returns the
+        number of active slots stepped."""
         self._admit()
         if not self._active:
             return 0
         n_stepped = len(self._active)
+        if self.spec:
+            return self._spec_step(n_stepped)
         # never scan past the longest remaining budget: the tail of the
         # horizon would provably have no active slot (EOS can still empty
         # a horizon early — those steps run masked and are not recorded)
@@ -885,6 +1126,75 @@ class Engine:
                     self._finish(slot)
         return n_stepped
 
+    def _spec_step(self, n_stepped: int) -> int:
+        """One fused speculative round: draft, verify, accept, rollback.
+
+        Mirrors the horizon step's host side exactly — one device
+        dispatch, one host sync, same drain loop — but the emitted mask
+        is *commits* (accepted-and-exact tokens) rather than pre-step
+        active flags. Commits are prefix runs per slot, so the drain can
+        stop at the first all-parked step just like the horizon loop."""
+        # never draft past the longest remaining budget: those proposals
+        # could not be committed by ANY slot (the same clamp the horizon
+        # loop applies to its scan length; at most draft_len distinct
+        # compile entries exist per engine)
+        rem_max = max(st["req"].max_new_tokens - len(st["generated"])
+                      for st in self._active.values())
+        k = min(self.draft_len, rem_max)
+        t0 = time.perf_counter()
+        store = self.pages if self.paged else self.slots
+        cache = store.take()                       # donated to the jit below
+        try:
+            if self.paged:
+                ys, tok, new_cache, pos, active, remaining = self._spec_jit(
+                    k, self.params, self._last_tok, cache,
+                    self.pages.table(), self._floor_dev, self._pos,
+                    self._active_dev, self._remaining_dev, self._eos_dev)
+            else:
+                ys, tok, new_cache, pos, active, remaining = self._spec_jit(
+                    k, self.params, self._last_tok, cache, self._pos,
+                    self._active_dev, self._remaining_dev, self._eos_dev)
+        except BaseException:
+            store.restore_if_undonated(cache)
+            raise
+        store.put(new_cache)
+        toks_t, com_t, stats_t = ys
+        toks_np, com_np, stats_np = jax.device_get((toks_t, com_t, stats_t))
+        self.metrics["decode_s"] += time.perf_counter() - t0
+        n_act = len(self._active)
+        self.metrics["spec_rounds"] += 1
+        self.metrics["draft_tokens"] += (k - 1) * n_act
+        # every active slot commits >= 1 exact token per round; commits
+        # beyond that first one are accepted draft proposals. Parked
+        # slots ran masked and commit nothing — they never dilute the
+        # acceptance accounting.
+        self.metrics["accepted_tokens"] += int(com_np.sum()) - n_act
+        self.metrics["decode_steps"] += int(com_np.any(axis=1).sum())
+        self._last_tok = tok
+        self._pos = pos
+        self._active_dev = active
+        self._remaining_dev = remaining
+        if self.collect_stats and stats_np is not None:
+            # one verify sample per round, masked to the slots that
+            # actually decoded (com_np.any(0) == the pre-round active set)
+            self._record_stats(stats_np, mask=com_np.any(axis=0))
+        for t in range(k):
+            if not com_np[t].any():
+                break
+            for slot in list(self._active):
+                if not com_np[t, slot]:
+                    continue
+                st = self._active[slot]
+                req = st["req"]
+                tokn = int(toks_np[t, slot])
+                st["generated"].append(tokn)
+                self.metrics["tokens_out"] += 1
+                done = (len(st["generated"]) >= req.max_new_tokens
+                        or (req.eos_id is not None and tokn == req.eos_id))
+                if done:
+                    self._finish(slot)
+        return n_stepped
+
     def run(self, max_steps: int = 10_000, *,
             strict: bool = False) -> Dict[int, Result]:
         """Drive until every submitted request completes.
@@ -921,18 +1231,22 @@ class Engine:
     def resolved_backend(self, phase: str) -> str:
         """Name of the backend the registry resolves for a serving phase.
 
-        ``phase``: "prefill" | "decode". Uses the SAME call constructor
-        as ``attn_apply`` (models.attention.build_attn_call), so the
-        report cannot drift from the dispatch. Families without attention
-        layers (recurrent) report "none".
+        ``phase``: "prefill" | "decode" | "draft" | "verify" (the last
+        two are the speculative round's passes). Uses the SAME call
+        constructor as ``attn_apply`` (models.attention.build_attn_call),
+        so the report cannot drift from the dispatch. Families without
+        attention layers (recurrent) report "none".
         """
         if self.cfg.family in ("rwkv6",):
             return "none"
+        decode_like = phase in ("decode", "draft", "verify")
         call = build_attn_call(
-            self.cfg, mode=phase,
-            paged=self.paged and phase == "decode",
-            per_slot=phase == "decode",
-            collect_stats=self.collect_stats)
+            self.cfg, mode="decode" if decode_like else "prefill",
+            paged=self.paged and decode_like,
+            per_slot=decode_like,
+            collect_stats=self.collect_stats,
+            draft=self.draft_profile if phase == "draft" else None,
+            verify=phase == "verify")
         return resolve_backend(call, self.attn_spec).name
 
     # ------------------------------------------------------------- reporting
@@ -948,6 +1262,14 @@ class Engine:
         m["cache_backend"] = "paged" if self.paged else "dense"
         m["attn_backend_prefill"] = self.resolved_backend("prefill")
         m["attn_backend_decode"] = self.resolved_backend("decode")
+        m["spec_decode"] = self.spec
+        if self.spec:
+            m["draft_len"] = self.draft_len
+            m["acceptance_rate"] = (
+                m["accepted_tokens"] / m["draft_tokens"]
+                if m["draft_tokens"] else 0.0)
+            m["attn_backend_draft"] = self.resolved_backend("draft")
+            m["attn_backend_verify"] = self.resolved_backend("verify")
         if self.paged:
             # resident bytes at the allocation high-water mark — what a
             # demand-sized pool must hold (the pool itself is max-sized

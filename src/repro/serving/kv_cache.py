@@ -197,7 +197,13 @@ class PagedKVCache(_DonatableCache):
 
     Page 0 is a reserved *scratch* page: pruned pages' gather indices and
     inactive slots' decode writes are redirected there, so its contents
-    are arbitrary-but-finite and, by construction, always masked.
+    are arbitrary-but-FINITE and, by construction, always masked. The
+    finiteness is load-bearing for K as well as V: an early-head-gated
+    head never fetches its pages (gathers read scratch in their place)
+    but still runs its softmax before the gate zeroes the output, so
+    NaN in scratch K would become NaN * 0 = NaN through the gate — which
+    is why the speculative rollback poison explicitly skips the scratch
+    page while freed-page poison (never a gather target) is safe.
 
     Page *ownership* lives in ``self.allocator`` (a refcounted
     `allocator.PageAllocator`): one physical page can back several slots
@@ -223,9 +229,16 @@ class PagedKVCache(_DonatableCache):
     def __init__(self, cfg, batch: int, max_len: int,
                  page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
-                 poison_freed: bool = False):
+                 poison_freed: bool = False,
+                 draft_scout: bool = False):
         hdp = cfg.hdp
         self.scout = hdp is not None and hdp.enabled
+        #: also store the int8 quantized-fraction copy of K at write time
+        #: (``f_scout``): the self-speculative draft reconstructs its
+        #: scores from the two int8 copies alone, so draft steps never
+        #: read the full-precision K pool. Only allocated on request —
+        #: non-speculating engines pay no extra pool memory.
+        self.draft_scout = draft_scout and self.scout
         ps = page_size or (hdp.block_k if self.scout else 16)
         if self.scout and ps != hdp.block_k:
             raise ValueError(
@@ -252,6 +265,8 @@ class PagedKVCache(_DonatableCache):
         }
         if self.scout:
             self.cache["k_scout"] = jnp.zeros(shape, jnp.int8)
+        if self.draft_scout:
+            self.cache["f_scout"] = jnp.zeros(shape, jnp.int8)
         self.allocator = PageAllocator(self.num_pages, reserved=1,
                                        on_free=self._on_free)
         self._slot_pages: Dict[int, List[int]] = {}
@@ -370,6 +385,10 @@ class PagedKVCache(_DonatableCache):
             from repro.models.attention import scout_int8
             new["k_scout"] = pool["k_scout"].at[:, flat].set(
                 scout_int8(kp, self.cfg.hdp))
+        if self.draft_scout:
+            from repro.models.attention import scout_frac_int8
+            new["f_scout"] = pool["f_scout"].at[:, flat].set(
+                scout_frac_int8(kp, self.cfg.hdp))
         return new
 
     def insert(self, one_cache, slot: int, row: int = 0,

@@ -248,7 +248,10 @@ def test_paged_scan_never_reads_pruned_pages():
 # --------------------------------------------------------- run() exhaustion
 def test_run_budget_exhaustion_warns_and_marks_incomplete():
     cfg = _qwen()
-    eng = Engine(cfg, max_batch=1, max_len=64, decode_horizon=1)
+    # horizon-loop semantics under test: exactly one token per step (the
+    # speculative round would commit several — pin it off for env legs)
+    eng = Engine(cfg, max_batch=1, max_len=64, decode_horizon=1,
+                 spec_decode=False)
     for uid, p in enumerate(_prompts(3, seed=11)):
         eng.submit(Request(uid, p, max_new_tokens=6))
     with pytest.warns(RuntimeWarning, match="step budget"):
