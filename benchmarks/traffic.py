@@ -1,0 +1,109 @@
+"""Seeded synthetic serving traffic: arrivals + length distributions.
+
+Produces the request stream the `serving_stream` benchmark (and any
+ad-hoc load experiment) feeds the engine: per request an arrival time in
+*engine steps* (the serve loop's discrete clock, so traces replay
+identically regardless of host speed), a prompt of sampled length, and a
+sampled output budget. Everything is drawn from one `numpy` Generator
+seeded by ``TrafficConfig.seed`` — the same config always yields the
+same trace, byte for byte (pinned in tests/test_scheduler.py).
+
+Arrival processes:
+
+* ``poisson`` — exponential inter-arrival gaps with mean ``1/rate``
+  steps: the steady mixed-load case continuous batching exists for.
+* ``burst`` — everything arrives at step 0: the closed-batch worst case
+  (maximal queue depth, admission purely budget/ordering driven).
+
+Length distributions are uniform-integer ranges; mixed short/long loads
+come from ``long_frac``: that fraction of requests (the trace's tail,
+interleaved deterministically by the rng) instead draws from the
+``long_lo..long_hi`` prompt range — the chunked-prefill-under-decode
+workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TrafficConfig:
+    n_requests: int = 16
+    arrival: str = "poisson"          # "poisson" | "burst"
+    rate: float = 0.5                 # mean arrivals per engine step
+    prompt_lo: int = 4                # uniform prompt-length range
+    prompt_hi: int = 24
+    max_new_lo: int = 4               # uniform output-budget range
+    max_new_hi: int = 8
+    long_frac: float = 0.0            # fraction drawing the long range
+    long_lo: int = 48
+    long_hi: int = 80
+    vocab: int = 250
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.arrival not in ("poisson", "burst"):
+            raise ValueError(f"arrival must be 'poisson' or 'burst', "
+                             f"got {self.arrival!r}")
+        if self.arrival == "poisson" and self.rate <= 0:
+            raise ValueError(f"poisson arrivals need rate > 0, "
+                             f"got {self.rate}")
+        if not 0.0 <= self.long_frac <= 1.0:
+            raise ValueError(f"long_frac must be in [0, 1], "
+                             f"got {self.long_frac}")
+
+
+@dataclasses.dataclass
+class SyntheticRequest:
+    uid: int
+    arrival_step: int
+    prompt: List[int]
+    max_new_tokens: int
+
+
+def generate(cfg: TrafficConfig,
+             vocab: Optional[int] = None) -> List[SyntheticRequest]:
+    """The deterministic trace for ``cfg``: requests sorted by arrival
+    step (uid order = arrival order; ties keep uid order)."""
+    rng = np.random.default_rng(cfg.seed)
+    vocab = vocab if vocab is not None else cfg.vocab
+    n = cfg.n_requests
+    if cfg.arrival == "burst":
+        arrive = np.zeros(n, dtype=int)
+    else:
+        gaps = rng.exponential(1.0 / cfg.rate, size=n)
+        arrive = np.floor(np.cumsum(gaps)).astype(int)
+    is_long = rng.random(n) < cfg.long_frac
+    out = []
+    for uid in range(n):
+        lo, hi = ((cfg.long_lo, cfg.long_hi) if is_long[uid]
+                  else (cfg.prompt_lo, cfg.prompt_hi))
+        plen = int(rng.integers(lo, max(hi, lo + 1)))
+        prompt = rng.integers(1, vocab, size=plen).tolist()
+        max_new = int(rng.integers(cfg.max_new_lo,
+                                   max(cfg.max_new_hi, cfg.max_new_lo + 1)))
+        out.append(SyntheticRequest(uid, int(arrive[uid]), prompt, max_new))
+    return out
+
+
+def replay(engine, trace: List[SyntheticRequest], request_cls,
+           max_steps: int = 100_000) -> Tuple[dict, int]:
+    """Drive ``engine`` through ``trace`` on the discrete step clock:
+    each request is submitted once the engine has run ``arrival_step``
+    steps, so mid-run admission is exercised deterministically. Returns
+    (results, steps run)."""
+    pending = list(trace)
+    step = 0
+    while pending or engine._n_pending():
+        while pending and pending[0].arrival_step <= step:
+            r = pending.pop(0)
+            engine.submit(request_cls(r.uid, r.prompt,
+                                      max_new_tokens=r.max_new_tokens))
+        engine.step()
+        step += 1
+        if step > max_steps:
+            raise RuntimeError(f"traffic replay exceeded {max_steps} steps")
+    return engine.results(), step

@@ -6,7 +6,10 @@
 Drives `serving.Engine` (continuous batching, per-slot positions, HDP
 prefill/decode) with synthetic prompts and reports throughput + achieved
 HDP sparsity. `--no-hdp` serves the identical model with dense attention
-for an A/B of output agreement and step cost.
+for an A/B of output agreement and step cost. `--stream-sched` (with an
+optional seeded `--arrival-rate` Poisson request stream) serves through
+the continuous-batching scheduler and additionally reports TTFT / TPOT /
+queue-depth stats.
 """
 from __future__ import annotations
 
@@ -20,7 +23,7 @@ import numpy as np
 from repro.attention import AttnSpec, spec_from_legacy
 from repro.configs import get_config
 from repro.configs.base import reduced
-from repro.serving import Engine, Request
+from repro.serving import Engine, Request, SchedulerConfig
 
 log = logging.getLogger("repro.serve")
 
@@ -86,6 +89,31 @@ def build_parser() -> argparse.ArgumentParser:
                     help="give every synthetic prompt a common random "
                          "prefix of this many tokens (the prefix-cache "
                          "benchmark workload); 0 = fully random prompts")
+    ap.add_argument("--stream-sched", dest="stream_sched",
+                    action="store_true", default=None,
+                    help="continuous-batching stream scheduler: token-"
+                         "budget admission, prefix-hit-first ordering, "
+                         "mid-run slot recycling, chunked prefill "
+                         "interleaved with decode. Token-identical to "
+                         "static serving. Default honors "
+                         "REPRO_STREAM_SCHED, else off")
+    ap.add_argument("--no-stream-sched", dest="stream_sched",
+                    action="store_false",
+                    help="force the stream scheduler off (the static A/B "
+                         "leg)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="mean request arrivals per engine step (Poisson "
+                         "process, seeded): requests are submitted while "
+                         "the engine is already decoding, exercising mid-"
+                         "run admission. 0 = submit everything up front. "
+                         "Needs --stream-sched")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="interleaved-prefill token budget per engine step "
+                         "for long prompts under the stream scheduler; "
+                         "default = one largest-bucket chunk per step")
+    ap.add_argument("--watchdog-steps", type=int, default=500,
+                    help="no-progress engine steps with requests pending "
+                         "before the stream scheduler's watchdog raises")
     ap.add_argument("--warmup", action="store_true",
                     help="run one throwaway request through the engine and "
                          "reset metrics before serving, so reported tok/s "
@@ -115,13 +143,19 @@ def run(args) -> dict:
         # one-release deprecation shim for the old string flags
         spec = spec_from_legacy(args.attn_backend, args.cache_backend,
                                 base=spec)
+    stream = getattr(args, "stream_sched", None)
+    sched_cfg = SchedulerConfig(
+        prefill_chunk_tokens=getattr(args, "prefill_chunk", None),
+        watchdog_steps=getattr(args, "watchdog_steps", 500)) \
+        if stream else None
     eng = Engine(cfg, max_batch=args.max_batch, max_len=args.max_len,
                  prefill_buckets=(16, 32, 64),
                  collect_stats=not args.no_hdp, attn=spec,
                  prefix_cache=args.prefix_cache,
                  decode_horizon=args.decode_horizon,
                  spec_decode=args.spec_decode,
-                 draft_len=args.draft_len)
+                 draft_len=args.draft_len,
+                 stream_sched=stream, sched=sched_cfg)
     if getattr(args, "warmup", False):
         # one throwaway request compiles the prefill/decode jits (same
         # max_new as the real batch, so every fused-loop scan length the
@@ -139,13 +173,38 @@ def run(args) -> dict:
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(1, cfg.vocab_size,
                           size=args.shared_prefix).tolist()
+    prompts = []
     for uid in range(args.requests):
         hi = min(48, args.max_len - args.max_new - args.shared_prefix)
         plen = int(rng.integers(4, max(hi, 5)))
-        prompt = shared + rng.integers(1, cfg.vocab_size, size=plen).tolist()
-        eng.submit(Request(uid, prompt, max_new_tokens=args.max_new))
+        prompts.append(shared
+                       + rng.integers(1, cfg.vocab_size, size=plen).tolist())
 
-    results = eng.run()
+    arrival_rate = getattr(args, "arrival_rate", 0.0) or 0.0
+    if arrival_rate > 0 and eng.sched is None:
+        raise SystemExit("--arrival-rate needs --stream-sched")
+    if arrival_rate > 0:
+        # Poisson arrivals in engine-step time, drawn AFTER the prompts
+        # so the prompt stream (and tokens_fp) matches the static and
+        # solo A/B legs token for token
+        gaps = rng.exponential(1.0 / arrival_rate, size=args.requests)
+        arrive = np.floor(np.cumsum(gaps)).astype(int)
+        pending = list(range(args.requests))
+        step = 0
+        while pending or eng._n_pending():
+            while pending and arrive[pending[0]] <= step:
+                uid = pending.pop(0)
+                eng.submit(Request(uid, prompts[uid],
+                                   max_new_tokens=args.max_new))
+            eng.step()
+            step += 1
+            if step > 100_000:
+                raise SystemExit("serve: arrival loop exceeded 100k steps")
+        results = eng.results()
+    else:
+        for uid, prompt in enumerate(prompts):
+            eng.submit(Request(uid, prompt, max_new_tokens=args.max_new))
+        results = eng.run()
     s = eng.summary()
     done = sum(len(r.tokens) == args.max_new for r in results.values())
     # order-independent fingerprint of every generated token — the A/B's
@@ -174,7 +233,21 @@ def run(args) -> dict:
         "cache_bytes": s["cache_bytes"],
         "tokens_fp": tokens_fp,
         "spec_decode": s["spec_decode"],
+        "stream_sched": s["stream_sched"],
     }
+    if s["stream_sched"]:
+        out.update(
+            sched_admitted=int(s["sched_admitted"]),
+            sched_recycled=int(s["sched_recycled"]),
+            sched_deferred=int(s["sched_deferred"]),
+            sched_chunk_tokens=int(s["sched_chunk_tokens"]),
+            sched_interleaved_steps=int(s["sched_interleaved_steps"]),
+            queue_depth_peak=int(s["queue_depth_peak"]),
+            queue_depth_mean=round(s.get("queue_depth_mean", 0.0), 3),
+            ttft_s_mean=round(s.get("ttft_s_mean", 0.0), 4),
+            ttft_s_p95=round(s.get("ttft_s_p95", 0.0), 4),
+            tpot_s_mean=round(s.get("tpot_s_mean", 0.0), 5),
+            queue_wait_s_mean=round(s.get("queue_wait_s_mean", 0.0), 4))
     if s["spec_decode"]:
         out.update(draft_len=s["draft_len"],
                    spec_rounds=int(s["spec_rounds"]),

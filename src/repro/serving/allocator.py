@@ -27,6 +27,15 @@ from __future__ import annotations
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
+class PoolExhausted(RuntimeError):
+    """The page pool cannot satisfy an allocation right now.
+
+    A *typed* exhaustion signal so callers can tell recoverable pressure
+    (defer the request, evict, retry next tick — what the stream
+    scheduler's token-budget admission does) from genuine bugs that also
+    surface as RuntimeError (e.g. a stale donated-cache handle)."""
+
+
 class PageAllocator:
     """Refcounted free-list allocator over page ids ``[reserved, num_pages)``.
 
@@ -76,7 +85,7 @@ class PageAllocator:
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
-            raise RuntimeError(
+            raise PoolExhausted(
                 f"page pool exhausted: need {n}, free {len(self._free)}")
         pages = self._free[:n]
         del self._free[:n]
@@ -161,6 +170,42 @@ class RadixPrefixCache:
         ps = self.page_size
         for i in range(len(tokens) // ps):
             yield tuple(tokens[i * ps:(i + 1) * ps])
+
+    def peek(self, tokens: Sequence[int], align: int = 1) -> int:
+        """Pages on the longest cached prefix of ``tokens`` — a read-only
+        probe: no references taken, no hit/miss counters bumped, no LRU
+        clocks touched. The stream scheduler's admission-ordering and
+        token-budget signal (``match`` at admission time remains the one
+        source of truth; a page evicted between peek and match just turns
+        the hit into a smaller hit or a cold admission)."""
+        node, n = self._root, 0
+        for chunk in self._chunks(tokens):
+            child = node.children.get(chunk)
+            if child is None:
+                break
+            n += 1
+            node = child
+        return n - n % max(align, 1)
+
+    def evictable_pages(self) -> int:
+        """Pages ``evict`` could free right now if pressed hard enough.
+
+        A node is reclaimable iff nothing in its subtree is pinned by a
+        slot (refcount > 1): eviction peels leaves, so a pinned node
+        blocks every ancestor, while sibling branches stay evictable.
+        Used by the scheduler's token-budget admission: admission
+        capacity = free pages + this."""
+        def walk(n: _Node) -> Tuple[int, bool]:
+            cnt, blocked = 0, False
+            for c in n.children.values():
+                c_cnt, c_blk = walk(c)
+                cnt += c_cnt
+                blocked |= c_blk
+            if blocked or self.alloc.refcount(n.page) > 1:
+                return cnt, True
+            return cnt + 1, False
+
+        return sum(walk(c)[0] for c in self._root.children.values())
 
     # --------------------------------------------------------------- match
     def match(self, tokens: Sequence[int], align: int = 1) -> List[int]:

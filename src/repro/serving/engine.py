@@ -69,6 +69,21 @@ frontier are rolled back by NaN-poisoning their K — the write floor
 keeps shared prefix pages outside both staging and rollback, so the
 allocator/prefix-cache invariants are untouched.
 
+With the **stream scheduler** (``stream_sched`` / ``REPRO_STREAM_SCHED``)
+the engine serves a continuous request stream instead of fixed waves:
+``submit()`` enqueues into a `scheduler.StreamScheduler` waiting queue,
+and every ``step()`` runs one scheduling tick before its decode —
+token-budget admission against free slots *and* free-or-evictable pages,
+biggest-prefix-cache-hit-first ordering, in-flight recycling of slots
+vacated mid-run, and long cold prompts chunk-prefilled a slice per step
+so the running batch keeps decoding underneath them. A watchdog raises
+instead of spinning when nothing can ever be admitted. The streaming
+``serve()`` generator yields Results in completion order, and
+per-request TTFT / TPOT / queue-wait plus queue-depth aggregates land in
+``summary()``. Scheduling only reorders *admission*; per-slot compute is
+untouched, so outputs stay byte-identical to static-wave serving (and to
+solo runs — the equivalence tests/test_serving.py pins).
+
 HDP is active inside both prefill and decode attention when
 ``cfg.hdp.enabled`` — stats (block/head/page sparsity per layer) are
 aggregated into engine metrics so serving examples/benchmarks can report
@@ -100,7 +115,8 @@ from repro.configs.base import ModelConfig
 from repro.models import registry
 from repro.models.attention import build_attn_call
 from repro.serving import kv_cache
-from repro.serving.allocator import RadixPrefixCache
+from repro.serving.allocator import PoolExhausted, RadixPrefixCache
+from repro.serving.scheduler import SchedulerConfig, StreamScheduler
 
 I32 = jnp.int32
 
@@ -122,6 +138,10 @@ SPEC_ENV = "REPRO_SPEC_DECODE"
 #: env var giving the default draft length (explicit kwargs win).
 DRAFT_ENV = "REPRO_DRAFT_LEN"
 
+#: env var enabling the continuous-batching stream scheduler when
+#: ``stream_sched=None`` is passed (explicit kwargs win).
+STREAM_ENV = "REPRO_STREAM_SCHED"
+
 
 @dataclasses.dataclass
 class Request:
@@ -141,6 +161,16 @@ class Result:
     #: False when Engine.run exhausted its step budget before this request
     #: finished (tokens then hold the partial generation so far).
     complete: bool = True
+    #: seconds from submit() to slot activation (queue + prefill wait);
+    #: None for requests served without a submit timestamp.
+    queue_wait_s: Optional[float] = None
+    #: seconds from submit() to the first generated token, at host-sync
+    #: granularity: every token of one fused horizon/spec round shares
+    #: that round's single sync timestamp.
+    ttft_s: Optional[float] = None
+    #: mean seconds per token after the first (same sync granularity;
+    #: None when fewer than two tokens were generated).
+    tpot_s: Optional[float] = None
 
 
 class Engine:
@@ -202,6 +232,17 @@ class Engine:
         attention (score source + survival-threshold overrides); None
         uses the default profile (scout-copy scores, exact-pass
         thresholds).
+    stream_sched: continuous-batching stream scheduler —
+        ``submit()`` enqueues into a waiting queue and every step runs
+        one `scheduler.StreamScheduler` tick (token-budget admission,
+        prefix-hit-first ordering, mid-run slot recycling, interleaved
+        chunked prefill, watchdog) before decoding. Composes with every
+        decode mode (horizon, prefix cache, spec decode) and never
+        changes per-request tokens — only admission timing/order. None
+        reads ``REPRO_STREAM_SCHED`` (default off); passing a ``sched``
+        config implies True.
+    sched: SchedulerConfig tuning the scheduler (chunk token budget per
+        step, admission order, watchdog limits); None uses defaults.
     """
 
     def __init__(self, cfg: ModelConfig, params=None, *, rng=None,
@@ -217,7 +258,9 @@ class Engine:
                  decode_horizon: Optional[int] = None,
                  spec_decode: Optional[bool] = None,
                  draft_len: Optional[int] = None,
-                 draft_profile: Optional[DraftProfile] = None):
+                 draft_profile: Optional[DraftProfile] = None,
+                 stream_sched: Optional[bool] = None,
+                 sched: Optional[SchedulerConfig] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "enc-dec serving uses launch/serve.py --arch whisper path")
@@ -327,6 +370,16 @@ class Engine:
         # anything below the floor to the scratch page
         self._floor_dev = jnp.zeros((max_batch,), I32)
         self.metrics: Dict[str, float] = self._fresh_metrics()
+        #: submit() timestamps per uid (popped at finish) and the finish
+        #: order log the streaming serve() generator drains
+        self._t_submit: Dict[int, float] = {}
+        self._finished: List[int] = []
+        if stream_sched is None:
+            env = os.environ.get(STREAM_ENV, "")
+            stream_sched = env.lower() in ("1", "true", "on") if env \
+                else sched is not None
+        self.sched = StreamScheduler(self, sched or SchedulerConfig()) \
+            if stream_sched else None
 
         # buffer donation: the serving cache (page pool / slot cache) is
         # aliased in place by the batched-prefill, chunked-prefill and
@@ -622,7 +675,11 @@ class Engine:
         if len(req.prompt) + req.max_new_tokens > self.max_len:
             raise ValueError(
                 f"request {req.uid}: prompt+generation exceeds max_len")
-        self._queue.append(req)
+        self._t_submit[req.uid] = time.perf_counter()
+        if self.sched is not None:
+            self.sched.enqueue(req)
+        else:
+            self._queue.append(req)
 
     def _bucket_for(self, n: int) -> int:
         if self.cfg.family in ("rwkv6", "zamba2"):
@@ -721,7 +778,7 @@ class Engine:
         need = self._pages_for(req) - len(shared) + (1 if full else 0)
         try:
             fresh = self._reserve(need)
-        except RuntimeError:
+        except PoolExhausted:
             self.pages.allocator.unref(shared)
             self._serve_cold(req)
             return
@@ -855,21 +912,26 @@ class Engine:
                 return b
         return rem  # exact-length fallback (one compile per distinct rem)
 
-    def _chunk_loop(self, prompt: np.ndarray, cache, off: int):
-        """Drive `_chunk_jit` from position `off` to the end of `prompt`."""
+    def _chunk_step(self, prompt: np.ndarray, cache, off: int):
+        """One `_chunk_jit` call at position ``off``; returns the updated
+        (cache, off). The unit the stream scheduler's interleaved prefill
+        advances by — decode runs between consecutive calls there."""
         plen = len(prompt)
         chunk = self.buckets[-1]
-        while off < plen:
-            rem = plen - off
-            clen = chunk if rem >= chunk else self._tail_len(rem, off)
-            piece = np.full((1, clen), prompt[plen - 1], np.int32)
-            piece[0, :min(rem, clen)] = prompt[off:off + clen]
-            cache, stats = self._chunk_jit(
-                self.params, jnp.asarray(piece), cache,
-                jnp.asarray(off, I32))
-            self._record_stats(stats)
-            self.metrics["prefill_tokens"] += clen
-            off += clen
+        rem = plen - off
+        clen = chunk if rem >= chunk else self._tail_len(rem, off)
+        piece = np.full((1, clen), prompt[plen - 1], np.int32)
+        piece[0, :min(rem, clen)] = prompt[off:off + clen]
+        cache, stats = self._chunk_jit(
+            self.params, jnp.asarray(piece), cache, jnp.asarray(off, I32))
+        self._record_stats(stats)
+        self.metrics["prefill_tokens"] += clen
+        return cache, off + clen
+
+    def _chunk_loop(self, prompt: np.ndarray, cache, off: int):
+        """Drive `_chunk_jit` from position `off` to the end of `prompt`."""
+        while off < len(prompt):
+            cache, off = self._chunk_step(prompt, cache, off)
         return cache
 
     def _prefill_long(self, req: Request) -> None:
@@ -888,6 +950,86 @@ class Engine:
         self.metrics["prefill_s"] += dt
         self.metrics["prefill_calls"] += 1
         self._install(req, cache, 0, dt)
+
+    # ------------------------------------------------- interleaved prefill
+    def _begin_stream_prefill(self, req: Request) -> Dict[str, Any]:
+        """Open an incremental chunked prefill for the stream scheduler.
+
+        The slot AND the request's full page footprint are reserved up
+        front, so a begun prefill can always complete — later pool
+        pressure defers *other* admissions, it can never strand a
+        half-prefilled prompt. The returned state dict is advanced by
+        `_advance_stream_prefill` one token-budget slice per engine
+        step, with decode running in between."""
+        pages = self._reserve(self._pages_for(req)) if self.paged else []
+        slot = self._free.pop(0)
+        return {"req": req, "slot": slot, "pages": pages,
+                "prompt": np.asarray(req.prompt, np.int32),
+                "cache": registry.init_cache(self.cfg, 1,
+                                             max_len=self.max_len),
+                "off": 0, "spent": 0.0}
+
+    def _advance_stream_prefill(self, st: Dict[str, Any],
+                                budget: int) -> bool:
+        """Advance an interleaved prefill by >= 1 chunk, up to ``budget``
+        prompt tokens; install + activate on completion (returns True).
+        The chunk jit and install path are the exact ones `_prefill_long`
+        drives in one blocking loop, so the resulting tokens are
+        identical — only the pacing differs."""
+        prompt = st["prompt"]
+        plen = len(prompt)
+        t0 = time.perf_counter()
+        done = 0
+        while st["off"] < plen and done < budget:
+            off0 = st["off"]
+            st["cache"], st["off"] = self._chunk_step(
+                prompt, st["cache"], off0)
+            done += st["off"] - off0
+            self.metrics["sched_chunk_tokens"] += st["off"] - off0
+        st["spent"] += time.perf_counter() - t0
+        if st["off"] < plen:
+            return False
+        self.metrics["prefill_s"] += st["spent"]
+        self.metrics["prefill_calls"] += 1
+        req, slot = st["req"], st["slot"]
+        try:
+            if self.paged:
+                self.pages.assign(slot, st["pages"])
+                st["pages"] = []           # owned by the slot from here
+                self.pages.insert(st["cache"], slot, 0)
+            else:
+                self.slots.insert(st["cache"], slot, 0)
+            self._activate(req, slot, st["spent"])
+        except BaseException:
+            # roll the slot back; _abort_stream_prefill (the scheduler's
+            # unwind) returns it and any still-held pages, and requeues
+            if self.paged and self.pages.slot_pages(slot):
+                self.pages.free(slot)
+            self._active.pop(slot, None)
+            raise
+        st["installed"] = True
+        if self.paged and self.prefix is not None:
+            self._register_prefix(req, slot)
+        return True
+
+    def _abort_stream_prefill(self, st: Dict[str, Any]) -> None:
+        """Unwind a failed interleaved prefill: pages and slot return to
+        their pools (a prefill that got as far as activation keeps its
+        slot — the live request owns the teardown from there)."""
+        if st.get("installed"):
+            return
+        if self.paged and st["pages"]:
+            self.pages.allocator.unref(st["pages"])
+        self._free.insert(0, st["slot"])
+
+    def _pages_capacity(self) -> int:
+        """Pages an admission could obtain right now: the free list plus
+        everything LRU eviction could reclaim from the prefix cache —
+        the supply side of the scheduler's token-budget check."""
+        cap = self.pages.allocator.available
+        if self.prefix is not None:
+            cap += self.prefix.evictable_pages()
+        return cap
 
     def _prefill_suffix(self, req: Request, shared: List[int],
                         fresh: List[int], slot: int,
@@ -965,7 +1107,11 @@ class Engine:
         bucket-padded and prefix-shared prompts."""
         plen = len(req.prompt)
         self._active[slot] = {"req": req, "generated": []}
-        self._results[req.uid] = Result(req.uid, plen, [], prefill_s=prefill_s)
+        res = Result(req.uid, plen, [], prefill_s=prefill_s)
+        t_sub = self._t_submit.get(req.uid)
+        if t_sub is not None:
+            res.queue_wait_s = time.perf_counter() - t_sub
+        self._results[req.uid] = res
         self._last_tok = self._last_tok.at[slot, 0].set(int(req.prompt[-1]))
         self._pos = self._pos.at[slot].set(plen - 1)
         self._active_dev = self._active_dev.at[slot].set(True)
@@ -983,7 +1129,12 @@ class Engine:
                 "block_sparsity": 0.0, "head_sparsity": 0.0,
                 "page_sparsity": 0.0, "stat_samples": 0, "page_samples": 0,
                 "cow_copies": 0, "spec_rounds": 0, "draft_tokens": 0,
-                "accepted_tokens": 0}
+                "accepted_tokens": 0,
+                # stream-scheduler counters (zero when it is off)
+                "sched_admitted": 0, "sched_recycled": 0,
+                "sched_deferred": 0, "sched_chunk_tokens": 0,
+                "sched_interleaved_steps": 0, "queue_depth_sum": 0,
+                "queue_depth_samples": 0, "queue_depth_peak": 0}
 
     def reset_metrics(self) -> None:
         """Zero the aggregated serving metrics (e.g. after a warmup pass,
@@ -1026,7 +1177,7 @@ class Engine:
             m["page_samples"] += 1
         m["stat_samples"] += 1
 
-    def _finish(self, slot: int) -> None:
+    def _finish(self, slot: int, now: Optional[float] = None) -> None:
         st = self._active.pop(slot)
         req = st["req"]
         res = self._results[req.uid]
@@ -1034,6 +1185,13 @@ class Engine:
         res.decode_steps = len(st["generated"])
         res.complete = True   # may have been marked incomplete by a prior
         # budget-exhausted run() whose follow-up call finished the request
+        t_sub = self._t_submit.pop(req.uid, None)
+        t_first = st.get("t_first")
+        if t_sub is not None and t_first is not None:
+            res.ttft_s = t_first - t_sub
+        if now is not None and t_first is not None and len(res.tokens) > 1:
+            res.tpot_s = (now - t_first) / (len(res.tokens) - 1)
+        self._finished.append(req.uid)
         if self.paged:
             # unref, not free: pages the prefix cache still holds (and
             # pages shared into other live slots) survive the slot
@@ -1056,9 +1214,22 @@ class Engine:
         slot in a single jitted call (one host sync per horizon/round);
         the serving cache is donated to the call, so page-pool updates
         are in place rather than a fresh copy per step. Returns the
-        number of active slots stepped."""
-        self._admit()
+        number of active slots stepped.
+
+        With the stream scheduler, admission is one scheduler tick
+        instead (budget check, ordering, interleaved prefill advance) and
+        the tick's progress feeds the stall watchdog; decode itself
+        always progresses (every active slot commits >= 1 token per
+        horizon/round), so the watchdog can only trip while the batch is
+        empty with requests stuck waiting."""
+        if self.sched is not None:
+            ticked = self.sched.tick()
+            self._sample_queue_depth()
+        else:
+            self._admit()
         if not self._active:
+            if self.sched is not None:
+                self.sched.watchdog(ticked)
             return 0
         n_stepped = len(self._active)
         if self.spec:
@@ -1096,7 +1267,8 @@ class Engine:
         # and the decode clock stops after it so the stats transfer is
         # billed to decode_s exactly like the per-token path did
         toks_np, act_np, stats_np = jax.device_get((toks_t, act_t, stats_t))
-        self.metrics["decode_s"] += time.perf_counter() - t0
+        t_sync = time.perf_counter()
+        self.metrics["decode_s"] += t_sync - t0
         any_act = act_np.any(axis=1)
         ran = int(any_act.sum())                   # steps with any active slot
         self.metrics["decode_steps"] += ran
@@ -1118,12 +1290,16 @@ class Engine:
                 st = self._active[slot]
                 req = st["req"]
                 tokn = int(toks_np[t, slot])
+                if not st["generated"]:
+                    st["t_first"] = t_sync     # TTFT at sync granularity
                 st["generated"].append(tokn)
                 self.metrics["tokens_out"] += 1
                 done = (len(st["generated"]) >= req.max_new_tokens
                         or (req.eos_id is not None and tokn == req.eos_id))
                 if done:
-                    self._finish(slot)
+                    self._finish(slot, t_sync)
+        if self.sched is not None:
+            self.sched.watchdog(True)      # decode progressed
         return n_stepped
 
     def _spec_step(self, n_stepped: int) -> int:
@@ -1160,7 +1336,8 @@ class Engine:
         store.put(new_cache)
         toks_t, com_t, stats_t = ys
         toks_np, com_np, stats_np = jax.device_get((toks_t, com_t, stats_t))
-        self.metrics["decode_s"] += time.perf_counter() - t0
+        t_sync = time.perf_counter()
+        self.metrics["decode_s"] += t_sync - t0
         n_act = len(self._active)
         self.metrics["spec_rounds"] += 1
         self.metrics["draft_tokens"] += (k - 1) * n_act
@@ -1187,13 +1364,41 @@ class Engine:
                 st = self._active[slot]
                 req = st["req"]
                 tokn = int(toks_np[t, slot])
+                if not st["generated"]:
+                    st["t_first"] = t_sync     # TTFT at sync granularity
                 st["generated"].append(tokn)
                 self.metrics["tokens_out"] += 1
                 done = (len(st["generated"]) >= req.max_new_tokens
                         or (req.eos_id is not None and tokn == req.eos_id))
                 if done:
-                    self._finish(slot)
+                    self._finish(slot, t_sync)
+        if self.sched is not None:
+            self.sched.watchdog(True)      # decode progressed
         return n_stepped
+
+    def _n_pending(self) -> int:
+        """Requests not yet finished: active slots, the static queue, and
+        (with the stream scheduler) its waiting + mid-prefill set."""
+        n = len(self._queue) + len(self._active)
+        if self.sched is not None:
+            n += self.sched.depth
+        return n
+
+    def _pending_requests(self) -> List[Request]:
+        reqs = list(self._queue)
+        if self.sched is not None:
+            reqs += self.sched.pending_requests()
+        return reqs
+
+    def _sample_queue_depth(self) -> None:
+        """One per-step queue-depth sample (post-tick, so it reads the
+        depth the step actually decodes under)."""
+        d = self.sched.depth
+        m = self.metrics
+        m["queue_depth_sum"] += d
+        m["queue_depth_samples"] += 1
+        if d > m["queue_depth_peak"]:
+            m["queue_depth_peak"] = d
 
     def run(self, max_steps: int = 10_000, *,
             strict: bool = False) -> Dict[int, Result]:
@@ -1208,24 +1413,59 @@ class Engine:
         further ``run()`` call can continue).
         """
         steps = 0
-        while (self._queue or self._active) and steps < max_steps:
+        while self._n_pending() and steps < max_steps:
             self.step()
             steps += 1
-        if self._queue or self._active:
+        if self._n_pending():
+            waiting = self._pending_requests()
             msg = (f"Engine.run: step budget {max_steps} exhausted with "
-                   f"{len(self._active)} active and {len(self._queue)} "
+                   f"{len(self._active)} active and {len(waiting)} "
                    f"queued request(s) unfinished")
             for st in self._active.values():
                 res = self._results[st["req"].uid]
                 res.tokens = list(st["generated"])
                 res.decode_steps = len(res.tokens)
                 res.complete = False
-            for req in self._queue:
+            for req in waiting:
                 self._results[req.uid] = Result(
                     req.uid, len(req.prompt), [], complete=False)
             if strict:
                 raise RuntimeError(msg)
             warnings.warn(msg, RuntimeWarning, stacklevel=2)
+        return dict(self._results)
+
+    def serve(self, reqs: Optional[Sequence[Request]] = None, *,
+              max_steps: int = 10_000):
+        """Streaming serve loop: yields each Result as it completes.
+
+        ``reqs`` are submitted up front (on top of anything already
+        submitted); more requests may be submitted between yields — the
+        loop keeps stepping until nothing is pending. Completion order
+        is service order, not submission order, whenever the scheduler
+        reorders admission or budgets differ. Raises RuntimeError when
+        ``max_steps`` engine iterations pass without draining (the
+        scheduler's watchdog usually fires first, naming the stuck
+        requests)."""
+        if reqs is not None:
+            for r in reqs:
+                self.submit(r)
+        emitted = len(self._finished)   # don't re-yield pre-loop results
+        steps = 0
+        while self._n_pending():
+            if steps >= max_steps:
+                raise RuntimeError(
+                    f"Engine.serve: step budget {max_steps} exhausted "
+                    f"with {self._n_pending()} request(s) unfinished")
+            self.step()
+            steps += 1
+            while emitted < len(self._finished):
+                uid = self._finished[emitted]
+                emitted += 1
+                yield self._results[uid]
+
+    def results(self) -> Dict[int, Result]:
+        """Snapshot of every Result recorded so far (finished requests
+        plus the still-active ones' shells)."""
         return dict(self._results)
 
     def resolved_backend(self, phase: str) -> str:
@@ -1259,6 +1499,25 @@ class Engine:
             m["head_sparsity"] /= m["stat_samples"]
         if m["page_samples"]:
             m["page_sparsity"] /= m["page_samples"]
+        m["stream_sched"] = self.sched is not None
+        if m.pop("queue_depth_samples") and self.sched is not None:
+            m["queue_depth_mean"] = (m.pop("queue_depth_sum")
+                                     / self.metrics["queue_depth_samples"])
+        else:
+            m.pop("queue_depth_sum", None)
+        ttfts = sorted(r.ttft_s for r in self._results.values()
+                       if r.ttft_s is not None)
+        if ttfts:
+            m["ttft_s_mean"] = float(np.mean(ttfts))
+            m["ttft_s_p95"] = float(ttfts[int(0.95 * (len(ttfts) - 1))])
+        tpots = [r.tpot_s for r in self._results.values()
+                 if r.tpot_s is not None]
+        if tpots:
+            m["tpot_s_mean"] = float(np.mean(tpots))
+        waits = [r.queue_wait_s for r in self._results.values()
+                 if r.queue_wait_s is not None]
+        if waits:
+            m["queue_wait_s_mean"] = float(np.mean(waits))
         m["cache_backend"] = "paged" if self.paged else "dense"
         m["attn_backend_prefill"] = self.resolved_backend("prefill")
         m["attn_backend_decode"] = self.resolved_backend("decode")

@@ -1,0 +1,306 @@
+"""Continuous-batching stream scheduler over the engine's slot/page machinery.
+
+`StreamScheduler` turns the engine's fixed-wave admission into an
+SGLang-style streaming serve loop. It owns the waiting queue and runs
+once per engine step (``tick``), between decode horizons / speculative
+rounds, doing three things:
+
+* **Token-budget admission.** A waiting request is admitted only when a
+  decode slot is free AND the page pool can hold its whole footprint
+  (prompt + output budget, via ``Engine._pages_for``), counting pages an
+  LRU eviction could reclaim (``RadixPrefixCache.evictable_pages``) as
+  capacity. When the head of the queue does not fit, admission stops —
+  head-of-line blocking is deliberate: skipping ahead to smaller
+  requests forever would starve big ones. Because finished slots free
+  their pages mid-run (``Engine._finish``), a queued request prefills
+  into the vacated slot at the very next tick — in-flight slot
+  recycling, no drain barrier between "waves".
+
+* **Prefix-cache-aware ordering.** With the radix tree enabled, waiting
+  requests are ordered biggest-cached-prefix-first each tick
+  (``RadixPrefixCache.peek`` — a ref-free probe, so hit/miss counters
+  stay honest), FIFO within ties. A hit both prefills less and needs
+  fewer fresh pages, so serving it first maximizes throughput under
+  pool pressure; the budget check uses the peeked hit to charge only
+  the fresh (unshared) pages.
+
+* **Chunked prefill interleaved with decode.** A long cold prompt
+  (longer than the largest prefill bucket) is NOT prefilled in one
+  blocking loop: the scheduler opens an incremental prefill
+  (``Engine._begin_stream_prefill`` reserves the slot + pages up front,
+  so completion is guaranteed) and advances it by at most
+  ``prefill_chunk_tokens`` per tick, so the running batch keeps
+  decoding between chunks and admission of shorter requests continues
+  around it. One interleaved prefill runs at a time; the per-request
+  tokens are identical to a one-shot prefill (the chunked-prefill
+  equivalence pinned in tests/test_paged_cache.py), so interleaving is
+  invisible to outputs.
+
+A **watchdog** closes the loop: if the engine makes no progress — no
+tokens decoded, nothing admitted, no prefill chunk advanced — for
+``watchdog_steps`` consecutive steps (or ``watchdog_s`` wall seconds)
+while requests are still waiting, `WatchdogError` is raised naming the
+stuck requests instead of spinning forever (the classic case: a request
+whose page footprint exceeds what the pool can ever offer).
+
+The scheduler is pure host-side policy: every device-touching action
+(prefill jits, page reservation, slot install) goes through the engine's
+existing admission paths, so batched bucketed prefill, prefix-hit
+serving, COW and all unwind/requeue invariants are reused, not
+reimplemented.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING, Any, Dict, List, Optional
+
+from repro.serving.allocator import PoolExhausted
+
+if TYPE_CHECKING:  # import cycle: engine constructs the scheduler
+    from repro.serving.engine import Engine, Request
+
+
+class WatchdogError(RuntimeError):
+    """The streaming serve loop stalled with requests still pending."""
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    """Knobs for `StreamScheduler` (see the module docstring).
+
+    prefill_chunk_tokens: interleaved-prefill token budget per engine
+        step; None = one largest-bucket chunk per step. At least one
+        chunk always runs per tick, so progress is guaranteed even when
+        the budget is smaller than a chunk.
+    order: "prefix" admits biggest peeked cache hit first (FIFO among
+        ties and whenever the prefix cache is off); "fifo" disables the
+        reordering entirely.
+    watchdog_steps / watchdog_s: consecutive no-progress engine steps /
+        wall seconds with pending requests before `WatchdogError`.
+    """
+
+    prefill_chunk_tokens: Optional[int] = None
+    order: str = "prefix"
+    watchdog_steps: int = 500
+    watchdog_s: float = 120.0
+
+    def __post_init__(self):
+        if self.order not in ("prefix", "fifo"):
+            raise ValueError(f"order must be 'prefix' or 'fifo', "
+                             f"got {self.order!r}")
+        if self.watchdog_steps < 1:
+            raise ValueError(
+                f"watchdog_steps must be >= 1, got {self.watchdog_steps}")
+        if self.prefill_chunk_tokens is not None \
+                and self.prefill_chunk_tokens < 1:
+            raise ValueError(f"prefill_chunk_tokens must be >= 1, got "
+                             f"{self.prefill_chunk_tokens}")
+
+
+@dataclasses.dataclass
+class _Waiting:
+    seq: int          # submission order — the FIFO tiebreak
+    req: "Request"
+
+
+class StreamScheduler:
+    """Host-side admission policy driven by ``Engine.step`` (one tick
+    per step). See the module docstring for the full contract."""
+
+    def __init__(self, engine: "Engine", cfg: SchedulerConfig):
+        self.eng = engine
+        self.cfg = cfg
+        self.waiting: List[_Waiting] = []
+        self._seq = 0
+        #: in-flight interleaved chunked prefill (Engine._begin_stream_prefill
+        #: state dict), at most one at a time
+        self._chunk: Optional[Dict[str, Any]] = None
+        self._idle_steps = 0
+        self._last_progress = time.perf_counter()
+        #: admission log (uids in service-entry order) — tests pin the
+        #: prefix-hit-first ordering through it
+        self.admitted_uids: List[int] = []
+
+    # -------------------------------------------------------------- queries
+    @property
+    def depth(self) -> int:
+        """Requests not yet decoding: waiting + mid-interleaved-prefill."""
+        return len(self.waiting) + (1 if self._chunk is not None else 0)
+
+    @property
+    def prefilling(self) -> bool:
+        return self._chunk is not None
+
+    def pending_requests(self) -> List["Request"]:
+        reqs = [w.req for w in self.waiting]
+        if self._chunk is not None:
+            reqs.insert(0, self._chunk["req"])
+        return reqs
+
+    # ------------------------------------------------------------- enqueue
+    def enqueue(self, req: "Request") -> None:
+        self.waiting.append(_Waiting(self._seq, req))
+        self._seq += 1
+
+    # ---------------------------------------------------------------- tick
+    def tick(self) -> bool:
+        """One scheduling pass (runs before the step's decode): advance
+        the in-flight chunked prefill, then admit what fits. Returns
+        whether anything progressed (the watchdog's signal when no slot
+        is decoding)."""
+        progressed = self._advance_chunk()
+        progressed |= self._admit()
+        return progressed
+
+    def watchdog(self, progressed: bool) -> None:
+        """Called once per engine step with that step's overall progress
+        (any decode token, admission, or prefill chunk). Raises
+        `WatchdogError` after ``watchdog_steps`` consecutive idle steps
+        or ``watchdog_s`` idle wall seconds with requests pending."""
+        now = time.perf_counter()
+        if progressed or self.depth == 0:
+            self._idle_steps = 0
+            self._last_progress = now
+            return
+        self._idle_steps += 1
+        if self._idle_steps >= self.cfg.watchdog_steps \
+                or now - self._last_progress >= self.cfg.watchdog_s:
+            uids = [r.uid for r in self.pending_requests()]
+            raise WatchdogError(
+                f"stream scheduler stalled: no decode, admission or "
+                f"prefill progress for {self._idle_steps} engine steps "
+                f"({now - self._last_progress:.1f}s) with request(s) "
+                f"{uids} pending — the queue head's slot/page footprint "
+                f"can never be satisfied, or the engine is wedged")
+
+    # ----------------------------------------------------------- admission
+    def _hit_pages(self, req: "Request") -> int:
+        eng = self.eng
+        if eng.prefix is None:
+            return 0
+        return eng.prefix.peek(req.prompt, align=eng._page_align)
+
+    def _fresh_pages_for(self, req: "Request", hit: int) -> int:
+        """Fresh pool pages an admission would need (shared hit pages are
+        free; a full-prompt hit still COWs one page — mirrors
+        Engine._serve_hit's reservation arithmetic)."""
+        eng = self.eng
+        if not eng.paged:
+            return 0
+        need = eng._pages_for(req)
+        if hit:
+            full = hit * eng.pages.page_size == len(req.prompt)
+            need = need - hit + (1 if full else 0)
+        return need
+
+    def _is_long_cold(self, req: "Request", hit: int) -> bool:
+        eng = self.eng
+        return (hit == 0 and eng._can_chunk
+                and len(req.prompt) > eng.buckets[-1])
+
+    def _admit(self) -> bool:
+        """Admit the largest prefix of the (ordered) waiting queue that
+        fits the slot + page budget; long cold prompts open the
+        interleaved prefill instead of a blocking one."""
+        eng = self.eng
+        if not self.waiting or not eng._free:
+            return False
+        scored = [(w, self._hit_pages(w.req)) for w in self.waiting]
+        if self.cfg.order == "prefix" and eng.prefix is not None:
+            scored.sort(key=lambda p: (-p[1], p[0].seq))
+        free = len(eng._free)
+        cap = eng._pages_capacity() if eng.paged else None
+        stage: List[_Waiting] = []
+        progressed = False
+        for w, hit in scored:
+            if free == 0:
+                break
+            need = self._fresh_pages_for(w.req, hit)
+            if cap is not None and need > cap:
+                # token budget: the head blocks (skipping ahead forever
+                # would starve it); retried next tick once slots finish
+                eng.metrics["sched_deferred"] += 1
+                break
+            if self._is_long_cold(w.req, hit):
+                if self._chunk is not None:
+                    # one interleaved prefill at a time — shorter
+                    # requests behind it keep flowing
+                    continue
+                # begin before dequeue: a reservation failure leaves the
+                # request waiting instead of dropping it
+                self._chunk = eng._begin_stream_prefill(w.req)
+                self.waiting.remove(w)
+                self._note_admitted(w.req.uid)
+                progressed = True
+            else:
+                stage.append(w)
+            free -= 1
+            if cap is not None:
+                cap -= need
+        if stage:
+            staged = {w.req.uid: w for w in stage}
+            for w in stage:
+                self.waiting.remove(w)
+            eng._queue.extend(w.req for w in stage)
+            try:
+                eng._admit()
+            except PoolExhausted:
+                # the capacity estimate raced an eviction — the engine's
+                # unwind already requeued the unadmitted requests, which
+                # _reclaim below hands back to us for the next tick
+                eng.metrics["sched_deferred"] += 1
+            finally:
+                returned = self._reclaim(staged)
+            for w in stage:
+                if w.req.uid not in returned:
+                    self._note_admitted(w.req.uid)
+                    progressed = True
+        return progressed
+
+    def _reclaim(self, staged: Dict[int, _Waiting]) -> set:
+        """Move whatever the engine unwound back to the waiting head,
+        preserving original submission order; returns the unwound uids."""
+        if not self.eng._queue:
+            return set()
+        back = []
+        for req in self.eng._queue:
+            w = staged.get(req.uid)
+            back.append(w if w is not None else _Waiting(self._seq, req))
+        self.eng._queue.clear()
+        self.waiting[:0] = back
+        return {w.req.uid for w in back}
+
+    def _note_admitted(self, uid: int) -> None:
+        self.admitted_uids.append(uid)
+        m = self.eng.metrics
+        m["sched_admitted"] += 1
+        if m["decode_steps"] > 0:
+            # decode already ran: this admission filled a slot vacated
+            # mid-run — the continuous-batching recycle the bench pins
+            m["sched_recycled"] += 1
+
+    # ---------------------------------------------- interleaved prefill
+    def _advance_chunk(self) -> bool:
+        """Run up to ``prefill_chunk_tokens`` of the in-flight prefill
+        (at least one chunk), installing + activating it when done."""
+        if self._chunk is None:
+            return False
+        eng = self.eng
+        budget = self.cfg.prefill_chunk_tokens or eng.buckets[-1]
+        st = self._chunk
+        if eng._active:
+            # a prefill slice about to run under a live decode batch —
+            # the interleaving the chunked-prefill satellite tests pin
+            eng.metrics["sched_interleaved_steps"] += 1
+        try:
+            done = eng._advance_stream_prefill(st, budget)
+        except BaseException:
+            self._chunk = None
+            eng._abort_stream_prefill(st)
+            if not st.get("installed"):
+                self.waiting.insert(0, _Waiting(self._seq, st["req"]))
+            raise
+        if done:
+            self._chunk = None
+        return True

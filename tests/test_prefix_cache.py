@@ -266,8 +266,11 @@ def test_hit_unwinds_cleanly_on_pool_exhaustion():
     cfg = _qwen()
     rng = np.random.default_rng(13)
     donor = rng.integers(1, 250, size=16).tolist()
+    # stream_sched pinned off: this drives the static _admit() path,
+    # whose contract is to *raise* on exhaustion (the scheduler defers
+    # instead — that side is covered by test_scheduler.py)
     eng = Engine(cfg, max_batch=2, max_len=32, num_pages=1 + 22,
-                 prefix_cache=True)
+                 prefix_cache=True, stream_sched=False)
     eng.submit(Request(0, donor, max_new_tokens=2))
     eng.run()                              # caches (16-1)//2 = 7 pages
     eng.submit(Request(1, rng.integers(1, 250, size=20).tolist(),
@@ -330,7 +333,7 @@ def test_match_alignment_trims_before_counting():
 def test_pool_exhaustion_still_raises_when_nothing_evictable():
     cfg = _qwen()
     eng = Engine(cfg, max_batch=2, max_len=32, num_pages=1 + 12,
-                 prefix_cache=True)
+                 prefix_cache=True, stream_sched=False)
     eng.submit(Request(0, list(range(1, 21)), max_new_tokens=4))
     eng._admit()                          # slot 0 holds 12 pages, 0 free
     eng.submit(Request(1, list(range(30, 50)), max_new_tokens=4))
@@ -362,7 +365,10 @@ def test_batched_prefill_donates_pool():
     """The fused prefill+scatter jit aliases the page pool in place: the
     pre-admit pool buffer is deleted, and a stale take() guard trips."""
     cfg = _qwen()
-    eng = Engine(cfg, max_batch=2, max_len=64, prefill_buckets=(16, 32))
+    # static path pinned: submit() must land in _queue for the direct
+    # _admit() call below to exercise the fused group prefill
+    eng = Engine(cfg, max_batch=2, max_len=64, prefill_buckets=(16, 32),
+                 stream_sched=False)
     for uid in range(2):
         eng.submit(Request(uid, [1 + uid, 2, 3, 4, 5], max_new_tokens=2))
     old = eng.pages.cache
@@ -377,7 +383,8 @@ def test_batched_prefill_donates_pool():
     eng.run()
 
     dense = Engine(cfg, params=eng.params, max_batch=2, max_len=64,
-                   prefill_buckets=(16, 32), attn=AttnSpec(layout="dense"))
+                   prefill_buckets=(16, 32), attn=AttnSpec(layout="dense"),
+                   stream_sched=False)
     for uid in range(2):
         dense.submit(Request(uid, [1 + uid, 2, 3, 4, 5], max_new_tokens=2))
     old_k = dense.slots.cache["k"]
