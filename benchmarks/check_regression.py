@@ -7,7 +7,9 @@
 Compares the ``current`` row block of a freshly produced
 BENCH_serving.json against the ``current`` block of the *committed* copy
 (saved aside before the bench run overwrites the file), row-matched by
-(bench, arch, hdp, backend, decode_horizon). The gate trips when the
+(bench, arch, hdp, backend, decode_horizon, attn_policy) — the policy
+component keeps serving_autotune's static-vs-cost legs from colliding
+with rows of the other serving benches. The gate trips when the
 MEAN decode_tok_s ratio across comparable rows drops below
 ``1 - max_regress`` — per-row wall-clock on shared CI runners is too
 noisy to gate on individually, but a >20% mean collapse across every
@@ -38,8 +40,11 @@ def _load_rows(path: str):
 
 
 def _key(row: dict):
+    # rows recorded before the autotune subsystem carry no attn_policy;
+    # they all ran static selection, so normalizing keeps them comparable
     return (row.get("bench"), row.get("arch"), row.get("hdp"),
-            row.get("backend"), row.get("decode_horizon"))
+            row.get("backend"), row.get("decode_horizon"),
+            row.get("attn_policy") or "static")
 
 
 def main(argv=None) -> int:

@@ -17,18 +17,20 @@ materializing oracle), ``xla_dense``, ``xla_hdp``, ``paged_hdp_decode``,
 pallas -> xla -> reference (Pallas only out-ranks XLA on TPU; off-TPU it
 runs in interpret mode when explicitly requested).
 """
-from repro.attention.registry import (BACKEND_ENV, Backend,
+from repro.attention.registry import (BACKEND_ENV, POLICY_ENV, Backend,
                                       BackendUnsupported, attention,
-                                      default_spec, get_backend,
-                                      known_backend_names, list_backends,
-                                      register_backend, resolve_backend)
+                                      default_spec, effective_policy,
+                                      get_backend, known_backend_names,
+                                      list_backends, register_backend,
+                                      resolve_backend)
 from repro.attention.spec import (AttnCall, AttnSpec, DraftProfile,
                                   spec_from_legacy)
 from repro.attention.stats import AttnStats, normalize_stats
 
 __all__ = [
     "AttnCall", "AttnSpec", "AttnStats", "Backend", "BackendUnsupported",
-    "BACKEND_ENV", "DraftProfile", "attention", "default_spec", "get_backend",
-    "known_backend_names", "list_backends", "normalize_stats",
-    "register_backend", "resolve_backend", "spec_from_legacy",
+    "BACKEND_ENV", "POLICY_ENV", "DraftProfile", "attention", "default_spec",
+    "effective_policy", "get_backend", "known_backend_names", "list_backends",
+    "normalize_stats", "register_backend", "resolve_backend",
+    "spec_from_legacy",
 ]

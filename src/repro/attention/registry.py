@@ -37,6 +37,11 @@ from repro.attention.spec import AttnCall, AttnSpec
 #: env var forcing the *default* spec's backend (explicit specs win).
 BACKEND_ENV = "REPRO_ATTN_BACKEND"
 
+#: env var deciding how policy="auto" specs rank auto-selected backends:
+#: "cost" routes through the repro.autotune cost model; anything else
+#: (including unset) keeps the static priority order.
+POLICY_ENV = "REPRO_ATTN_POLICY"
+
 _BACKEND_MODULES = ("repro.attention.reference", "repro.attention.backends")
 
 
@@ -127,8 +132,27 @@ def default_spec() -> AttnSpec:
     return AttnSpec(backend=os.environ.get(BACKEND_ENV, "auto"))
 
 
-def resolve_backend(call: AttnCall, spec: Optional[AttnSpec] = None) -> Backend:
-    """Pick the backend serving ``call`` under ``spec`` (static logic)."""
+def effective_policy(spec: AttnSpec) -> str:
+    """The selection policy ``spec`` actually runs under: its own unless
+    "auto", in which case REPRO_ATTN_POLICY=cost opts the process in."""
+    if spec.policy != "auto":
+        return spec.policy
+    return ("cost" if os.environ.get(POLICY_ENV, "").strip() == "cost"
+            else "static")
+
+
+_COST_WARNED = False
+
+
+def resolve_backend(call: AttnCall, spec: Optional[AttnSpec] = None, *,
+                    sig=None, tuner=None) -> Backend:
+    """Pick the backend serving ``call`` under ``spec`` (static logic).
+
+    ``sig`` (a :class:`repro.autotune.cost.CallSig`) activates cost-based
+    ranking of the auto candidates when the spec's effective policy is
+    "cost"; without it (or under explicit requests) the static priority
+    order decides. ``tuner`` overrides the process-default tuner.
+    """
     _ensure_backends()
     spec = spec if spec is not None else default_spec()
     cands = [b for b in _REGISTRY.values() if b.supports(call)]
@@ -144,6 +168,23 @@ def resolve_backend(call: AttnCall, spec: Optional[AttnSpec] = None) -> Backend:
         # forces the oracle end-to-end even through explicit specs that
         # only pin the layout; explicit non-auto requests still win
         req = os.environ.get(BACKEND_ENV, "auto")
+    if req == "auto" and sig is not None and effective_policy(spec) == "cost":
+        try:
+            if tuner is None:
+                from repro.autotune.tuner import default_tuner
+                tuner = default_tuner()
+            return tuner.choose(call, sig, cands)
+        except Exception:
+            # never let a cost-model bug change dispatch correctness —
+            # degrade to the static order, warn once per process
+            global _COST_WARNED
+            if not _COST_WARNED:
+                _COST_WARNED = True
+                import warnings
+                warnings.warn("cost-policy backend selection failed; "
+                              "falling back to static priority order",
+                              RuntimeWarning, stacklevel=2)
+            return best(cands)
     if req != "auto":
         known = {n for b in _REGISTRY.values() for n in (b.name, *b.tags)}
         if req not in known:
@@ -179,6 +220,15 @@ def attention(q, k, v, call: AttnCall, *, spec: Optional[AttnSpec] = None,
         q_pos = jnp.arange(q.shape[-2])
     if k_pos is None and k is not None:
         k_pos = jnp.arange(k.shape[1])
-    backend = resolve_backend(call, spec)
+    sig = None
+    eff_spec = spec if spec is not None else default_spec()
+    if (effective_policy(eff_spec) == "cost"
+            and eff_spec.requested_for(call.mode) == "auto"):
+        # shapes/dtypes are static under tracing, so the signature (and
+        # hence the choice) is burnt into the compiled program
+        from repro.autotune.cost import call_signature
+        sig = call_signature(call, q, k=k, cache=cache,
+                             page_table=page_table)
+    backend = resolve_backend(call, eff_spec, sig=sig)
     return backend.run(q, k, v, call, q_pos=q_pos, k_pos=k_pos,
                        cache=cache, page_table=page_table)

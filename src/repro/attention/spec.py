@@ -29,6 +29,7 @@ MODES = ("prefill", "decode")
 LAYOUTS = ("dense", "paged")
 CACHE_LAYOUTS = ("auto", "dense", "paged")
 DRAFT_SCORES = ("scout", "int", "approx")
+POLICIES = ("auto", "static", "cost")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,6 +163,15 @@ class AttnSpec:
         families, dense otherwise (Engine-level; ignored by dispatch).
       allow_fallback: when the requested backend does not support a call,
         fall down the auto chain instead of raising.
+      policy: how "auto" picks among supporting candidates —
+        * ``"static"``: registry priority order (the historical rule).
+        * ``"cost"``: the :mod:`repro.autotune` cost model ranks the
+          candidates under the detected hardware profile, probing
+          ambiguous calls once. Only consulted when the *requested*
+          backend resolves to "auto" — an exact name or family tag still
+          pins.
+        * ``"auto"`` (default): ``REPRO_ATTN_POLICY`` decides (``cost``
+          enables the tuner, anything else means static).
     """
 
     backend: str = "auto"
@@ -169,11 +179,15 @@ class AttnSpec:
     decode: Optional[str] = None
     layout: str = "auto"
     allow_fallback: bool = True
+    policy: str = "auto"
 
     def __post_init__(self):
         if self.layout not in CACHE_LAYOUTS:
             raise ValueError(
                 f"layout must be one of {CACHE_LAYOUTS}, got {self.layout!r}")
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"policy must be one of {POLICIES}, got {self.policy!r}")
 
     def requested_for(self, mode: str) -> str:
         over = self.prefill if mode == "prefill" else self.decode

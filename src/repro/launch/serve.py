@@ -85,6 +85,28 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--draft-len", type=int, default=None,
                     help="tokens proposed+verified per speculative round; "
                          "default honors REPRO_DRAFT_LEN, else 4")
+    ap.add_argument("--policy", default=None,
+                    choices=["static", "cost"],
+                    help="auto-selection policy for the attention backend: "
+                         "static = registry priority order; cost = the "
+                         "repro.autotune cost model ranks candidates under "
+                         "the detected hardware profile (probing ambiguous "
+                         "calls once). Default honors REPRO_ATTN_POLICY, "
+                         "else static")
+    ap.add_argument("--tuner-cache", default=None,
+                    help="JSON path for the cost-policy tuner's measured "
+                         "cache: loaded before serving (warm start) and "
+                         "written back after, so repeat runs skip probes")
+    ap.add_argument("--adaptive-spec", dest="adaptive_spec",
+                    action="store_true", default=None,
+                    help="acceptance-adaptive speculation: an EMA of the "
+                         "draft acceptance rate re-plans draft length and "
+                         "draft prune aggressiveness per round "
+                         "(token-identical at any plan). Default honors "
+                         "REPRO_ADAPTIVE_SPEC, else off")
+    ap.add_argument("--no-adaptive-spec", dest="adaptive_spec",
+                    action="store_false",
+                    help="force adaptive speculation off (fixed draft_len)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="give every synthetic prompt a common random "
                          "prefix of this many tokens (the prefix-cache "
@@ -138,11 +160,18 @@ def run(args) -> dict:
             hdp = dataclasses.replace(hdp, calib=args.calib)
         cfg = cfg.replace(hdp=hdp)
 
-    spec = AttnSpec(backend=args.backend, layout=args.layout)
+    policy = getattr(args, "policy", None)
+    spec = AttnSpec(backend=args.backend, layout=args.layout,
+                    policy=policy if policy is not None else "auto")
     if args.attn_backend is not None or args.cache_backend is not None:
         # one-release deprecation shim for the old string flags
         spec = spec_from_legacy(args.attn_backend, args.cache_backend,
                                 base=spec)
+    tuner = None
+    tuner_cache = getattr(args, "tuner_cache", None)
+    if tuner_cache:
+        from repro.autotune import Tuner
+        tuner = Tuner(cache_path=tuner_cache)
     stream = getattr(args, "stream_sched", None)
     sched_cfg = SchedulerConfig(
         prefill_chunk_tokens=getattr(args, "prefill_chunk", None),
@@ -155,6 +184,8 @@ def run(args) -> dict:
                  decode_horizon=args.decode_horizon,
                  spec_decode=args.spec_decode,
                  draft_len=args.draft_len,
+                 adaptive_spec=getattr(args, "adaptive_spec", None),
+                 tuner=tuner,
                  stream_sched=stream, sched=sched_cfg)
     if getattr(args, "warmup", False):
         # one throwaway request compiles the prefill/decode jits (same
@@ -234,7 +265,19 @@ def run(args) -> dict:
         "tokens_fp": tokens_fp,
         "spec_decode": s["spec_decode"],
         "stream_sched": s["stream_sched"],
+        "attn_policy": s["attn_policy"],
     }
+    if "meas_decode_step_s" in s:
+        out["meas_decode_step_s"] = round(s["meas_decode_step_s"], 6)
+    if s["attn_policy"] == "cost":
+        out.update(tuner_hits=int(s.get("tuner_hits", 0)),
+                   tuner_misses=int(s.get("tuner_misses", 0)),
+                   tuner_probes=int(s.get("tuner_probes", 0)),
+                   tuner_cached=int(s.get("tuner_cached", 0)))
+        if "pred_decode_step_s" in s:
+            out["pred_decode_step_s"] = round(s["pred_decode_step_s"], 6)
+        if tuner_cache and eng.tuner is not None:
+            eng.tuner.save(tuner_cache)   # warm-start the next run
     if s["stream_sched"]:
         out.update(
             sched_admitted=int(s["sched_admitted"]),
@@ -255,7 +298,12 @@ def run(args) -> dict:
                    accepted_tokens=int(s["accepted_tokens"]),
                    acceptance_rate=round(s["acceptance_rate"], 4),
                    attn_draft=s["attn_backend_draft"],
-                   attn_verify=s["attn_backend_verify"])
+                   attn_verify=s["attn_backend_verify"],
+                   adaptive_spec=s["adaptive_spec"])
+        if s["adaptive_spec"]:
+            out.update(
+                acceptance_ema=round(s["acceptance_ema"], 4),
+                draft_len_mean=round(s["draft_len_mean"] or 0.0, 3))
     if s["cache_backend"] == "paged":
         out["pages_peak"] = s["pages_peak"]
         out["pages_in_use"] = s["pages_in_use"]

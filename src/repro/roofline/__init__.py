@@ -1,3 +1,6 @@
-from repro.roofline import analysis
+from repro.roofline import analysis, hardware
+from repro.roofline.hardware import (HOST_CPU, TPU_V5E, HardwareProfile,
+                                     detect_profile, get_profile)
 
-__all__ = ["analysis"]
+__all__ = ["analysis", "hardware", "HardwareProfile", "TPU_V5E", "HOST_CPU",
+           "detect_profile", "get_profile"]

@@ -18,15 +18,18 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.roofline import hlo_cost
+from repro.roofline.hardware import TPU_V5E, HardwareProfile
 
-# TPU v5e constants (per chip)
-PEAK_FLOPS = 197e12          # bf16
-HBM_BW = 819e9               # bytes/s
-ICI_BW = 50e9                # bytes/s per link (conservative single-link)
-HBM_BYTES = 16 * 2 ** 30     # 16 GiB HBM2 capacity (binary, per spec);
-#                              runtime reserve is ~100s of MB — cells within
-#                              ~0.5 GB of the edge are flagged in
-#                              EXPERIMENTS.md §Dry-run.
+# TPU v5e constants (per chip) — kept under their historical names for
+# launch/dryrun.py and benchmarks/decode_roofline.py; the values now
+# live in roofline/hardware.py as pluggable HardwareProfiles.
+PEAK_FLOPS = TPU_V5E.peak_flops      # bf16
+HBM_BW = TPU_V5E.hbm_bw              # bytes/s
+ICI_BW = TPU_V5E.ici_bw              # bytes/s per link (single-link)
+HBM_BYTES = TPU_V5E.mem_bytes        # 16 GiB HBM2 capacity (binary, per
+#                              spec); runtime reserve is ~100s of MB —
+#                              cells within ~0.5 GB of the edge are
+#                              flagged in EXPERIMENTS.md §Dry-run.
 
 
 @dataclasses.dataclass
@@ -45,14 +48,22 @@ class Roofline:
     xla_flops: Optional[float] = None       # cost_analysis() cross-check
     top_flops: Optional[List] = None        # [(label, flops)] attribution
     top_bytes: Optional[List] = None
+    hw: Optional[str] = None                # hardware profile the times use
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
 
 
 def analyze(compiled, *, model_flops_per_device: Optional[float] = None,
-            keep_top: int = 8) -> Roofline:
-    """model_flops_per_device: 6*N*D token-based FLOPs (global / n_devices)."""
+            keep_top: int = 8,
+            hw: Optional[HardwareProfile] = None) -> Roofline:
+    """model_flops_per_device: 6*N*D token-based FLOPs (global / n_devices).
+
+    ``hw`` selects the hardware envelope the time terms divide by —
+    default TPU v5e (the dry-run tables project the deploy target);
+    pass ``hardware.detect_profile()`` to roofline the host itself.
+    """
+    prof = hw if hw is not None else TPU_V5E
     cost = hlo_cost.module_cost(compiled.as_text())
     flops, byts, cbytes = cost.flops, cost.bytes, cost.coll_bytes
 
@@ -65,9 +76,9 @@ def analyze(compiled, *, model_flops_per_device: Optional[float] = None,
     except Exception:
         pass
 
-    ct = flops / PEAK_FLOPS
-    mt = byts / HBM_BW
-    lt = cbytes / ICI_BW
+    ct = flops / prof.peak_flops
+    mt = byts / prof.hbm_bw
+    lt = cbytes / prof.ici_bw
     bottleneck = max((("compute", ct), ("memory", mt), ("collective", lt)),
                      key=lambda kv: kv[1])[0]
 
@@ -86,7 +97,7 @@ def analyze(compiled, *, model_flops_per_device: Optional[float] = None,
                     {k: int(v) for k, v in cost.coll_by_kind.items()},
                     ct, mt, lt, bottleneck, peak,
                     model_flops_per_device, ratio, xla,
-                    top["flops"], top["bytes"])
+                    top["flops"], top["bytes"], prof.name)
 
 
 def model_flops(cfg, shape, n_devices: int) -> float:

@@ -109,8 +109,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.attention import (AttnSpec, DraftProfile, default_spec,
-                             known_backend_names, resolve_backend,
-                             spec_from_legacy)
+                             effective_policy, known_backend_names,
+                             resolve_backend, spec_from_legacy)
 from repro.configs.base import ModelConfig
 from repro.models import registry
 from repro.models.attention import build_attn_call
@@ -141,6 +141,11 @@ DRAFT_ENV = "REPRO_DRAFT_LEN"
 #: env var enabling the continuous-batching stream scheduler when
 #: ``stream_sched=None`` is passed (explicit kwargs win).
 STREAM_ENV = "REPRO_STREAM_SCHED"
+
+#: env var enabling acceptance-adaptive speculation when
+#: ``adaptive_spec=None`` is passed (explicit kwargs win; the env default
+#: degrades silently when speculative decode itself is off).
+ADAPTIVE_ENV = "REPRO_ADAPTIVE_SPEC"
 
 
 @dataclasses.dataclass
@@ -232,6 +237,19 @@ class Engine:
         attention (score source + survival-threshold overrides); None
         uses the default profile (scout-copy scores, exact-pass
         thresholds).
+    adaptive_spec: acceptance-adaptive speculation — a
+        `repro.autotune.SpecController` keeps a running acceptance-rate
+        EMA and re-plans the draft length (1..draft_len) and the draft
+        profile's prune aggressiveness before every round. Committed
+        tokens stay byte-identical at any plan (exact-match acceptance
+        — the knobs only move the work/acceptance tradeoff). None reads
+        ``REPRO_ADAPTIVE_SPEC`` and degrades silently when spec decode
+        is off; passing True explicitly without spec_decode raises.
+    tuner: explicit `repro.autotune.Tuner` to install as the process
+        default (shared by cost-policy dispatch everywhere; engines are
+        traced against the process tuner because backend selection
+        happens inside jit traces). None keeps the current default —
+        created lazily, warm-started from ``REPRO_TUNER_CACHE``.
     stream_sched: continuous-batching stream scheduler —
         ``submit()`` enqueues into a waiting queue and every step runs
         one `scheduler.StreamScheduler` tick (token-budget admission,
@@ -259,6 +277,8 @@ class Engine:
                  spec_decode: Optional[bool] = None,
                  draft_len: Optional[int] = None,
                  draft_profile: Optional[DraftProfile] = None,
+                 adaptive_spec: Optional[bool] = None,
+                 tuner=None,
                  stream_sched: Optional[bool] = None,
                  sched: Optional[SchedulerConfig] = None):
         if cfg.is_encoder_decoder:
@@ -306,6 +326,21 @@ class Engine:
         self.draft_len = int(draft_len)
         self.draft_profile = draft_profile if draft_profile is not None \
             else DraftProfile()
+        if adaptive_spec is None:
+            env = os.environ.get(ADAPTIVE_ENV, "")
+            adaptive_spec = env.lower() in ("1", "true", "on") if env else False
+            adaptive_spec = adaptive_spec and self.spec   # env default degrades
+        elif adaptive_spec and not self.spec:
+            raise ValueError(
+                "adaptive_spec=True requires spec_decode (there is no "
+                "draft length to adapt without speculative rounds)")
+        self.spec_ctl = None
+        if adaptive_spec:
+            from repro.autotune import SpecConfig, SpecController
+            self.spec_ctl = SpecController(
+                self.draft_profile,
+                cfg.hdp if cfg.hdp is not None and cfg.hdp.enabled else None,
+                SpecConfig(k_max=self.draft_len))
         if (self.spec and layout != "paged" and cfg.hdp is not None
                 and cfg.hdp.enabled and cfg.hdp.calib != "none"):
             # the paged pinning above, for the same reason seen from the
@@ -323,6 +358,22 @@ class Engine:
         self.collect_stats = collect_stats
         self.paged = layout == "paged"
         self.attn_spec = spec
+        self.policy = effective_policy(spec)
+        self.tuner = None
+        if tuner is not None:
+            # backend selection happens inside jit traces, which consult
+            # the process-default tuner — install the explicit one there
+            from repro.autotune import set_default_tuner
+            set_default_tuner(tuner)
+        if self.policy == "cost":
+            from repro.autotune import default_tuner
+            self.tuner = default_tuner()
+        # static retrace token for the decode/spec jits: bumped when a
+        # flushed probe flips a tuner decision, so exactly the affected
+        # programs re-trace (and re-consult the tuner). Prefill decisions
+        # stay fixed for the engine's lifetime — admission jits carry no
+        # epoch (a bounded, documented limitation).
+        self._attn_epoch = 0
         if decode_horizon is None:
             decode_horizon = int(os.environ.get(HORIZON_ENV, "1") or 1)
         if decode_horizon < 1:
@@ -392,14 +443,18 @@ class Engine:
             self._prefill_paged_fn if self.paged else self._prefill_dense_fn,
             static_argnums=(2,), donate_argnums=(3,))
         self._chunk_jit = jax.jit(self._prefill_chunk_fn, donate_argnums=(2,))
+        # static argnums: scan length / draft plan + the attention epoch
+        # (cost-policy retrace token); the spec round also threads the
+        # round's DraftProfile statically so the adaptive controller can
+        # swap profiles at a bounded number of compile entries
         self._decode_jit = jax.jit(
             self._decode_loop_paged_fn if self.paged
             else self._decode_loop_dense_fn,
-            static_argnums=(0,), donate_argnums=(3,))
+            static_argnums=(0, 1), donate_argnums=(4,))
         self._spec_jit = jax.jit(
             self._spec_round_paged_fn if self.paged
             else self._spec_round_dense_fn,
-            static_argnums=(0,), donate_argnums=(3,))
+            static_argnums=(0, 1, 2), donate_argnums=(5,))
 
     # ------------------------------------------------------------ prefix cache
     def _build_prefix_cache(self, requested) -> Optional[RadixPrefixCache]:
@@ -516,26 +571,29 @@ class Engine:
         tok, cache, pos, active, remaining = carry
         return ys, tok, cache, pos, active, remaining
 
-    def _decode_loop_paged_fn(self, length, params, tok, cache, table,
+    def _decode_loop_paged_fn(self, length, epoch, params, tok, cache, table,
                               floors, pos, active, remaining, eos):
+        del epoch  # static retrace token only — selection reruns per trace
         return self._decode_loop(length, params, tok, cache, table, floors,
                                  pos, active, remaining, eos)
 
-    def _decode_loop_dense_fn(self, length, params, tok, cache, pos, active,
-                              remaining, eos):
+    def _decode_loop_dense_fn(self, length, epoch, params, tok, cache, pos,
+                              active, remaining, eos):
+        del epoch
         return self._decode_loop(length, params, tok, cache, None, None,
                                  pos, active, remaining, eos)
 
     # ------------------------------------------------------ speculative round
-    def _draft_step(self, params, token, cache, pos, table, floors):
+    def _draft_step(self, params, token, cache, pos, table, floors,
+                    profile):
         """One approximate draft decode step (cheap attention per the
-        engine's DraftProfile; never collects stats)."""
+        round's DraftProfile; never collects stats)."""
         kw = {"page_table": table, "write_floor": floors} \
             if table is not None else {}
         logits, new_cache, _ = registry.apply_decode(
             self.cfg, params, token, cache, pos[:, None],
             collect_stats=False, attn=self.attn_spec,
-            draft=self.draft_profile, **kw)
+            draft=profile, **kw)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(I32)[:, None]
         return nxt, new_cache
 
@@ -593,8 +651,8 @@ class Engine:
                         jnp.asarray(jnp.nan, cur.dtype), cur)
         return {**cache, "k": kc.at[:, b, stale].set(val)}
 
-    def _spec_round(self, k, params, tok, cache, table, floors, pos,
-                    active, remaining, eos):
+    def _spec_round(self, k, profile, params, tok, cache, table, floors,
+                    pos, active, remaining, eos):
         """One fused self-speculative round (``k`` = draft_len, static).
 
         Draft: ``k - 1`` sequential decode steps under the draft profile
@@ -619,7 +677,8 @@ class Engine:
             def body(carry, _):
                 tok_i, cache_i, pos_i = carry
                 nxt, cache_i = self._draft_step(params, tok_i, cache_i,
-                                                pos_i, table_eff, floors)
+                                                pos_i, table_eff, floors,
+                                                profile)
                 return (nxt, cache_i, pos_i + 1), nxt[:, 0]
 
             (_, cache, _), ds = jax.lax.scan(
@@ -660,15 +719,17 @@ class Engine:
         return ((exact.T, commit.T, stats), tok, cache, pos, new_active,
                 remaining)
 
-    def _spec_round_paged_fn(self, k, params, tok, cache, table, floors,
-                             pos, active, remaining, eos):
-        return self._spec_round(k, params, tok, cache, table, floors, pos,
-                                active, remaining, eos)
+    def _spec_round_paged_fn(self, k, profile, epoch, params, tok, cache,
+                             table, floors, pos, active, remaining, eos):
+        del epoch  # static retrace token only
+        return self._spec_round(k, profile, params, tok, cache, table,
+                                floors, pos, active, remaining, eos)
 
-    def _spec_round_dense_fn(self, k, params, tok, cache, pos, active,
-                             remaining, eos):
-        return self._spec_round(k, params, tok, cache, None, None, pos,
-                                active, remaining, eos)
+    def _spec_round_dense_fn(self, k, profile, epoch, params, tok, cache,
+                             pos, active, remaining, eos):
+        del epoch
+        return self._spec_round(k, profile, params, tok, cache, None, None,
+                                pos, active, remaining, eos)
 
     # --------------------------------------------------------------- public
     def submit(self, req: Request) -> None:
@@ -1168,13 +1229,21 @@ class Engine:
         m = self.metrics
         # np.mean works on device and host leaves alike — the fused decode
         # loop hands this numpy slices it already fetched in its one sync
-        m["block_sparsity"] += self._masked_mean(bs, mask)
-        m["head_sparsity"] += self._masked_mean(hs, mask)
+        b_mean = self._masked_mean(bs, mask)
+        h_mean = self._masked_mean(hs, mask)
+        m["block_sparsity"] += b_mean
+        m["head_sparsity"] += h_mean
         if getattr(stats, "page_sparsity", None) is not None:
             # decode-only field: averaged over its own sample count so
             # prefill records don't dilute it
-            m["page_sparsity"] += self._masked_mean(stats.page_sparsity, mask)
+            p_mean = self._masked_mean(stats.page_sparsity, mask)
+            m["page_sparsity"] += p_mean
             m["page_samples"] += 1
+            if self.tuner is not None:
+                # sharpen the cost model's sparse terms with measured
+                # decode sparsity (prefill samples carry no page field
+                # and would skew the decode-centric EMA)
+                self.tuner.observe_sparsity(b_mean, h_mean, p_mean)
         m["stat_samples"] += 1
 
     def _finish(self, slot: int, now: Optional[float] = None) -> None:
@@ -1206,6 +1275,18 @@ class Engine:
         self._floor_dev = self._floor_dev.at[slot].set(0)
         self._free.append(slot)
 
+    def _maybe_retune(self) -> None:
+        """Flush pending tuner probes (host side, between device steps).
+
+        A measured winner that flips a standing cost decision bumps the
+        attention epoch — a static argument of the decode/spec jits — so
+        exactly the affected programs re-trace once and re-consult the
+        tuner. Called at the top of every step and by the stream
+        scheduler when a recycled slot re-enters the batch. No-op under
+        static policy."""
+        if self.tuner is not None and self.tuner.flush_probes():
+            self._attn_epoch += 1
+
     def step(self) -> int:
         """One engine iteration: admit + one fused decode horizon (or,
         with ``spec_decode``, one fused self-speculative round).
@@ -1222,6 +1303,7 @@ class Engine:
         always progresses (every active slot commits >= 1 token per
         horizon/round), so the watchdog can only trip while the batch is
         empty with requests stuck waiting."""
+        self._maybe_retune()
         if self.sched is not None:
             ticked = self.sched.tick()
             self._sample_queue_depth()
@@ -1247,13 +1329,14 @@ class Engine:
         try:
             if self.paged:
                 ys, tok, new_cache, pos, active, remaining = self._decode_jit(
-                    length, self.params, self._last_tok, cache,
-                    self.pages.table(), self._floor_dev, self._pos,
+                    length, self._attn_epoch, self.params, self._last_tok,
+                    cache, self.pages.table(), self._floor_dev, self._pos,
                     self._active_dev, self._remaining_dev, self._eos_dev)
             else:
                 ys, tok, new_cache, pos, active, remaining = self._decode_jit(
-                    length, self.params, self._last_tok, cache, self._pos,
-                    self._active_dev, self._remaining_dev, self._eos_dev)
+                    length, self._attn_epoch, self.params, self._last_tok,
+                    cache, self._pos, self._active_dev, self._remaining_dev,
+                    self._eos_dev)
         except BaseException:
             # trace/compile failures leave the donated input untouched —
             # restore the handle so the engine stays usable and the real
@@ -1316,20 +1399,26 @@ class Engine:
         # compile entries exist per engine)
         rem_max = max(st["req"].max_new_tokens - len(st["generated"])
                       for st in self._active.values())
-        k = min(self.draft_len, rem_max)
+        if self.spec_ctl is not None:
+            k_plan, profile = self.spec_ctl.plan()
+            k = min(k_plan, rem_max)
+        else:
+            k, profile = min(self.draft_len, rem_max), self.draft_profile
         t0 = time.perf_counter()
         store = self.pages if self.paged else self.slots
         cache = store.take()                       # donated to the jit below
         try:
             if self.paged:
                 ys, tok, new_cache, pos, active, remaining = self._spec_jit(
-                    k, self.params, self._last_tok, cache,
-                    self.pages.table(), self._floor_dev, self._pos,
-                    self._active_dev, self._remaining_dev, self._eos_dev)
+                    k, profile, self._attn_epoch, self.params,
+                    self._last_tok, cache, self.pages.table(),
+                    self._floor_dev, self._pos, self._active_dev,
+                    self._remaining_dev, self._eos_dev)
             else:
                 ys, tok, new_cache, pos, active, remaining = self._spec_jit(
-                    k, self.params, self._last_tok, cache, self._pos,
-                    self._active_dev, self._remaining_dev, self._eos_dev)
+                    k, profile, self._attn_epoch, self.params,
+                    self._last_tok, cache, self._pos, self._active_dev,
+                    self._remaining_dev, self._eos_dev)
         except BaseException:
             store.restore_if_undonated(cache)
             raise
@@ -1345,8 +1434,11 @@ class Engine:
         # beyond that first one are accepted draft proposals. Parked
         # slots ran masked and commit nothing — they never dilute the
         # acceptance accounting.
-        self.metrics["accepted_tokens"] += int(com_np.sum()) - n_act
+        accepted = int(com_np.sum()) - n_act
+        self.metrics["accepted_tokens"] += accepted
         self.metrics["decode_steps"] += int(com_np.any(axis=1).sum())
+        if self.spec_ctl is not None:
+            self.spec_ctl.update(accepted, (k - 1) * n_act)
         self._last_tok = tok
         self._pos = pos
         self._active_dev = active
@@ -1474,7 +1566,10 @@ class Engine:
         ``phase``: "prefill" | "decode" | "draft" | "verify" (the last
         two are the speculative round's passes). Uses the SAME call
         constructor as ``attn_apply`` (models.attention.build_attn_call),
-        so the report cannot drift from the dispatch. Families without
+        so the report cannot drift from the dispatch. Under the cost
+        policy the tuner's recorded decision for the phase (ground truth
+        of what a trace actually dispatched) takes precedence; before
+        any trace the static resolution is reported. Families without
         attention layers (recurrent) report "none".
         """
         if self.cfg.family in ("rwkv6",):
@@ -1487,6 +1582,10 @@ class Engine:
             collect_stats=self.collect_stats,
             draft=self.draft_profile if phase == "draft" else None,
             verify=phase == "verify")
+        if self.tuner is not None:
+            dec = self.tuner.decision_for(call)
+            if dec is not None:
+                return dec
         return resolve_backend(call, self.attn_spec).name
 
     # ------------------------------------------------------------- reporting
@@ -1521,6 +1620,31 @@ class Engine:
         m["cache_backend"] = "paged" if self.paged else "dense"
         m["attn_backend_prefill"] = self.resolved_backend("prefill")
         m["attn_backend_decode"] = self.resolved_backend("decode")
+        m["attn_policy"] = self.policy
+        if m["decode_steps"]:
+            m["meas_decode_step_s"] = m["decode_s"] / m["decode_steps"]
+        if self.tuner is not None:
+            ts = self.tuner.stats()
+            m["tuner_hits"] = ts["hits"]
+            m["tuner_misses"] = ts["misses"]
+            m["tuner_probes"] = ts["probes"]
+            m["tuner_cached"] = ts["measured"]
+            est = None
+            if self.cfg.family not in ("rwkv6",):
+                # under spec decode the per-round hot path is the
+                # multi-query verify call, not a plain decode step —
+                # predict the phase that actually ran
+                call = build_attn_call(
+                    self.cfg, mode="decode", paged=self.paged,
+                    per_slot=True, collect_stats=self.collect_stats,
+                    verify=self.spec)
+                est = self.tuner.estimate_for(call)
+            if est is not None:
+                from repro.autotune import predict_engine_step
+                _, ce = est
+                m["pred_decode_step_s"] = predict_engine_step(
+                    registry.param_count(self.cfg, active_only=True),
+                    self.max_batch, self.cfg.n_layers, ce, self.tuner.hw)
         m["spec_decode"] = self.spec
         if self.spec:
             m["draft_len"] = self.draft_len
@@ -1529,6 +1653,12 @@ class Engine:
                 if m["draft_tokens"] else 0.0)
             m["attn_backend_draft"] = self.resolved_backend("draft")
             m["attn_backend_verify"] = self.resolved_backend("verify")
+            m["adaptive_spec"] = self.spec_ctl is not None
+            if self.spec_ctl is not None:
+                sc = self.spec_ctl.summary()
+                m["acceptance_ema"] = sc["acceptance_ema"]
+                m["draft_len_mean"] = sc["draft_len_mean"]
+                m["spec_plans"] = sc["rounds"]
         if self.paged:
             # resident bytes at the allocation high-water mark — what a
             # demand-sized pool must hold (the pool itself is max-sized
