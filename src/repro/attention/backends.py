@@ -89,12 +89,16 @@ def _supports_paged_hdp(call: AttnCall) -> bool:
 
 
 def _run_paged(q, call, *, q_pos, k_pos, cache, page_table, stage3):
+    # quantized pools carry no scout copies (k_scout is None; the scout
+    # is a view of the int8 codes) and per-page scales instead
     out, st = A.hdp_paged_decode_attention(
-        q, cache["k_pages"], cache["v_pages"], cache["k_scout"], page_table,
+        q, cache["k_pages"], cache["v_pages"], cache.get("k_scout"),
+        page_table,
         q_pos=q_pos, k_pos=k_pos, hdp=call.hdp, window=call.window,
         return_stats=call.needs_stats, stage3=stage3,
         draft=call.draft, per_query=call.verify,
-        fk_pool=cache.get("f_scout"))
+        fk_pool=cache.get("f_scout"),
+        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"))
     return out, normalize_stats(st)
 
 

@@ -45,16 +45,33 @@ def _pad_pos(pos, target):
     return _pad_axis(pos + 1, pos.ndim - 1, target) - 1
 
 
-def _densify(cache, page_table):
+def _densify(cache, page_table, int_bits=4):
     """Gather the FULL page pools into contiguous [B, nP*ps, N, hd] tensors.
 
     The oracle reads everything — fetch-upon-mask is a performance
     property of the production backends, not part of the semantics; the
     keep mask excludes pruned pages from the softmax either way.
+    ``int_bits`` is the pool grid of a quantized cache (ignored for fp32
+    pools): it fixes the static scale of the derived integer scout view.
     """
     kp, vp = cache["k_pages"], cache["v_pages"]
     B, nP = page_table.shape
     ps, N, hd = kp.shape[1], kp.shape[2], kp.shape[3]
+    if kp.dtype == jnp.int8:
+        # quantized pool: dequantize through the per-page scales (poison
+        # sentinel -> NaN, exactly like the production stage 3) and
+        # derive the integer scout view from the codes (poison -> 0,
+        # exactly like the production stage 1)
+        from repro.core.quant import decode_pool, pool_view_finite
+        ks = cache["k_scale"][page_table][:, :, None, :, None]
+        vs = cache["v_scale"][page_table][:, :, None, :, None]
+        k = decode_pool(kp[page_table], ks).reshape(B, nP * ps, N, hd)
+        vg = vp[page_table]
+        v = (vg.astype(F32) * vs if vg.dtype != jnp.int8
+             else decode_pool(vg, vs)).reshape(B, nP * ps, N, hd)
+        ik = jnp.trunc(pool_view_finite(kp[page_table], int_bits).reshape(
+            B, nP * ps, N, hd))
+        return k, v, ik
     k = kp[page_table].reshape(B, nP * ps, N, hd)
     v = vp[page_table].reshape(B, nP * ps, N, hd)
     ik = None
@@ -229,10 +246,11 @@ def _hdp_decode(q, k, v, call, q_pos, k_pos, *, ik=None, fixed_grid=False,
 def run_reference(q, k, v, call: AttnCall, *, q_pos, k_pos, cache=None,
                   page_table=None):
     from repro.models.attention import _mask_bias
+    from repro.core.quant import pool_int_bits
     ik = None
     fixed_grid = False
     if call.layout == "paged":
-        k, v, ik = _densify(cache, page_table)
+        k, v, ik = _densify(cache, page_table, pool_int_bits(call.hdp))
         fixed_grid = True  # write-time scout copy => static fixed-point grid
     if call.hdp is None:
         valid = _mask_bias(q_pos, k_pos, call.causal, call.window)

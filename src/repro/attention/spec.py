@@ -30,6 +30,7 @@ LAYOUTS = ("dense", "paged")
 CACHE_LAYOUTS = ("auto", "dense", "paged")
 DRAFT_SCORES = ("scout", "int", "approx")
 POLICIES = ("auto", "static", "cost")
+KV_DTYPES = ("auto", "fp32", "int8", "fp8_v")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,6 +162,14 @@ class AttnSpec:
       prefill / decode: optional per-mode overrides of ``backend``.
       layout: serving cache layout — "auto" picks paged for transformer
         families, dense otherwise (Engine-level; ignored by dispatch).
+      kv_dtype: storage format of the paged KV pool — "int8" (the
+        production default: per-page scales, scout copies derived as
+        views), "fp8_v" (int8 K + fp8 V), or "fp32" (the opt-in A/B
+        oracle). "auto" (default) resolves through ``REPRO_KV_DTYPE``
+        then "int8". Quantized-pool engines round-trip K/V through the
+        pool grid at *prefill* write time (so prefix hits, COW tails and
+        chunked prefill stay token-identical to cold runs); dense-layout
+        engines always serve fp32.
       allow_fallback: when the requested backend does not support a call,
         fall down the auto chain instead of raising.
       policy: how "auto" picks among supporting candidates —
@@ -178,6 +187,7 @@ class AttnSpec:
     prefill: Optional[str] = None
     decode: Optional[str] = None
     layout: str = "auto"
+    kv_dtype: str = "auto"
     allow_fallback: bool = True
     policy: str = "auto"
 
@@ -185,6 +195,9 @@ class AttnSpec:
         if self.layout not in CACHE_LAYOUTS:
             raise ValueError(
                 f"layout must be one of {CACHE_LAYOUTS}, got {self.layout!r}")
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {KV_DTYPES}, got {self.kv_dtype!r}")
         if self.policy not in POLICIES:
             raise ValueError(
                 f"policy must be one of {POLICIES}, got {self.policy!r}")

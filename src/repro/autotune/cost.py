@@ -245,20 +245,28 @@ def crossover_table(sig: CallSig, hw: HardwareProfile, kv_lens,
     """kv_len x sparsity grid: predicted paged-HDP vs dense step time.
 
     The motivating tradeoff of the whole subsystem in one table — where
-    ``sparsity x kv_len`` beats the sparse pipeline's overhead. Returned
-    rows carry both predicted times and the winner; recorded into
-    BENCH_serving.json by the serving_autotune bench.
+    ``sparsity x kv_len`` beats the sparse pipeline's overhead. The HDP
+    side is priced at the *pool's* ``sig.kv_itemsize`` (1 under the
+    production int8 store: surviving pages stream codes, dequant never
+    round-trips HBM — a ~4x resident-extent byte drop that moves the
+    crossover toward HDP at much shorter kv_len x sparsity products),
+    while the dense comparator always streams the fp32 request cache.
+    Returned rows carry both predicted times, the priced pool itemsize
+    and the winner; recorded into BENCH_serving.json by the
+    serving_autotune bench.
     """
     rows = []
     for kv in kv_lens:
         for psp in page_sparsities:
             s_hdp = dataclasses.replace(sig, kv_len=int(kv), hdp=True)
             s_dense = dataclasses.replace(sig, kv_len=int(kv), hdp=False,
-                                          layout="dense", page_size=0)
+                                          layout="dense", page_size=0,
+                                          kv_itemsize=4)
             t_hdp = predict("paged_hdp_decode", s_hdp, hw,
                             SparsityEstimate(page=psp)).step_time(hw)
             t_dense = predict("xla_dense", s_dense, hw).step_time(hw)
             rows.append({"kv_len": int(kv), "page_sparsity": round(psp, 3),
+                         "kv_itemsize": sig.kv_itemsize,
                          "t_hdp_s": t_hdp, "t_dense_s": t_dense,
                          "winner": "hdp" if t_hdp < t_dense else "dense"})
     return rows

@@ -46,6 +46,115 @@ def quantize_and_split(
     return xq, i, f
 
 
+# --------------------------------------------------------------------------
+# Shared per-page pool quantization (int8-first serving KV store)
+# --------------------------------------------------------------------------
+# THE one quantization grid of the serving pool, its scout views, and the
+# kernels' in-register dequant. The pool stores int8 *codes* plus a
+# per-page scale; the grid step is the static power of two
+# ``pool_scale(int_bits)`` so that
+#
+#   * dequantized values land exactly on the fixed-point grid the
+#     attention maths already snaps K to (coarse 2^(int_bits-7) grid is a
+#     subset of the 2^-frac_bits grid) — ``quantize_fixed`` is the
+#     identity on decoded values, so every consumer downstream of a
+#     dequant is untouched;
+#   * multiplying by the scale is exact in fp32, so the Pallas kernel
+#     (scale factored around its dots) and the XLA paths (scale applied
+#     at gather) produce bit-identical scores.
+#
+# Code -128 never arises from encoding (codes clamp to +/-127); it is
+# reserved as the *position-granular poison sentinel* — the quantized
+# analogue of the NaN the debug hooks write into rejected speculative
+# positions. ``decode_pool`` maps it to NaN (the stage-3 tripwire);
+# ``pool_view_finite`` maps it to 0 (the stage-1 scout, which under fp32
+# pools reads a separate finite copy and must stay finite here too).
+# Freed-*page* poison is page-granular and travels through the per-page
+# scale instead: a NaN scale poisons every dequant of the page while the
+# static-grid scout views stay finite (same split as fp32 pools, where
+# only ``k_pages`` was poisoned and the scout copies stayed readable).
+
+#: reserved int8 code marking a poisoned position (never produced by
+#: ``encode_pool``; decodes to NaN, scout-views to 0).
+POISON_CODE = -128
+
+#: grid of the int8 quantized-fraction scout copy / view (2^6: fractions
+#: in (-1, 1) scale to +/-64, inside int8 range). Coarser than the
+#: cache's ``frac_bits`` on purpose — the draft only needs argmax-grade
+#: scores.
+FRAC_SCOUT_SCALE = 64.0
+
+
+def pool_int_bits(hdp) -> int:
+    """Integer bits of the pool grid: the HDP grid when the scout runs,
+    a Q4 default for HDP-off paged serving (same dynamic range)."""
+    return hdp.int_bits if hdp is not None and hdp.enabled else 4
+
+
+def pool_scale(int_bits: int = 4) -> float:
+    """Static power-of-two step of the int8 pool grid: +/-127 codes span
+    (just under) the fixed-point range +/-2^int_bits."""
+    return 2.0 ** (int_bits - 7)
+
+
+def encode_pool(x: jnp.ndarray, int_bits: int = 4) -> jnp.ndarray:
+    """Float values -> int8 pool codes on the static grid.
+
+    Codes clamp to [-127, 127]; -128 is reserved for poison. Inputs are
+    assumed finite (the pool only ever encodes freshly-projected K/V)."""
+    s = pool_scale(int_bits)
+    return jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+
+
+def decode_pool(codes: jnp.ndarray, scale) -> jnp.ndarray:
+    """int8 codes (+ broadcastable per-page scale) -> fp32 values.
+
+    The POISON_CODE sentinel decodes to NaN so position-granular poison
+    survives quantization; a NaN scale poisons the whole page."""
+    c = codes.astype(jnp.float32)
+    c = jnp.where(codes == POISON_CODE, jnp.nan, c)
+    return c * jnp.asarray(scale, jnp.float32)
+
+
+def pool_view_finite(codes: jnp.ndarray, int_bits: int = 4) -> jnp.ndarray:
+    """Finite static-grid view of pool codes (poison -> 0, scale = grid).
+
+    What the stage-1 scout and the draft derive their copies from: under
+    fp32 pools these were separate finite int8 copies, so the views must
+    ignore both poison channels — a freed/rejected page's *scores* stay
+    finite (and masked); only a stage-3 read of its full-precision
+    values trips NaN."""
+    c = jnp.where(codes == POISON_CODE, 0, codes).astype(jnp.float32)
+    return c * pool_scale(int_bits)
+
+
+def roundtrip_pool(x: jnp.ndarray, int_bits: int = 4) -> jnp.ndarray:
+    """Snap x to exactly what an encode/decode round trip preserves.
+
+    Applied to K/V at *prefill* write time by quantized-pool engines, so
+    the dense request cache, the page pool, prefix-cache hits and COW
+    tails all hold the same values — paged-vs-paged token identity is
+    exact, and only the fp32-vs-int8 A/B sees quantization drift."""
+    s = pool_scale(int_bits)
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127) * s
+
+
+def scout_int_codes(x: jnp.ndarray, int_bits: int = 4,
+                    frac_bits: int = 12) -> jnp.ndarray:
+    """int8 integer-scout codes of K (trunc of the fixed-point grid) —
+    the write-time copy fp32 pools store and quantized pools derive."""
+    xq = quantize_fixed(x.astype(jnp.float32), int_bits, frac_bits)
+    return jnp.trunc(xq).astype(jnp.int8)
+
+
+def scout_frac_codes(x: jnp.ndarray, int_bits: int = 4,
+                     frac_bits: int = 12) -> jnp.ndarray:
+    """int8 quantized-fraction scout codes of K (FRAC_SCOUT_SCALE grid)."""
+    xq = quantize_fixed(x.astype(jnp.float32), int_bits, frac_bits)
+    f = xq - jnp.trunc(xq)
+    return jnp.round(f * FRAC_SCOUT_SCALE).astype(jnp.int8)
+
+
 def calib_scale(x: jnp.ndarray, int_bits: int, mode: str) -> jnp.ndarray:
     """Per-tensor scale mapping x onto the fixed-point grid.
 

@@ -18,9 +18,19 @@ instead of once per token, which is the round's bandwidth win. Per-row
 keep masks and KV extents still apply inside the softmax: verify rows
 sit at consecutive positions, so row ``r``'s valid extent is the base
 ``kv_len`` plus its query index (``r % Sq``) — no extra prefetch array.
-K arrives full-precision from the pool and is snapped to the fixed-point
-grid on the VPU (trunc/round cost no extra HBM traffic), matching the
-write-time-quantized semantics of the XLA stage exactly.
+
+Two pool formats:
+
+* fp32 pool — K arrives full-precision and is snapped to the fixed-point
+  grid on the VPU (trunc/round cost no extra HBM traffic), matching the
+  write-time-quantized semantics of the XLA stage exactly.
+* int8 pool (``k_scale``/``v_scale`` passed) — pages arrive as int8
+  codes (4x less DMA per surviving page) and are dequantized IN REGISTER
+  from scalar-prefetched per-page scales; the decoded values land
+  exactly on the fixed-point grid, so no re-snap is needed and the
+  scores match the XLA dequant path bit for bit (power-of-two scales
+  commute exactly with the dots). The -128 poison sentinel decodes to
+  NaN (tripwire), and a NaN page scale poisons the whole page.
 """
 from __future__ import annotations
 
@@ -31,7 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.core.quant import int_frac_split, quantize_fixed
+from repro.core.quant import POISON_CODE, int_frac_split, quantize_fixed
 from repro.kernels.compat import tpu_compiler_params
 
 F32 = jnp.float32
@@ -41,8 +51,10 @@ NEG = -1e30
 def _kernel(pid_ref, logical_ref, cnt_ref, len_ref,   # scalar prefetch
             q_ref, k_ref, v_ref, keep_ref, o_ref,     # tensors
             acc_ref, m_ref, l_ref,                    # scratch
-            *, scale, approx, int_bits, frac_bits, ps, max_keep, n_q):
+            *, scale, approx, int_bits, frac_bits, ps, max_keep, n_q,
+            kscl_ref=None, vscl_ref=None):
     b = pl.program_id(0)
+    n = pl.program_id(1)
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -55,10 +67,20 @@ def _kernel(pid_ref, logical_ref, cnt_ref, len_ref,   # scalar prefetch
     def _body():
         rows = q_ref.shape[2] * q_ref.shape[3]        # G * Sq
         q = q_ref[0, 0].reshape(rows, -1).astype(F32)  # [G*Sq, hd] fixed grid
-        k = k_ref[0, :, 0].astype(F32)                # [ps, hd] pool page
-        # snap the full-precision page to the write-time scout's grid on
-        # the VPU (the shared core.quant ops are plain jnp — safe here)
-        kq = quantize_fixed(k, int_bits, frac_bits)
+        if kscl_ref is None:
+            # fp32 pool: snap the full-precision page to the write-time
+            # scout's grid on the VPU (the shared core.quant ops are
+            # plain jnp — safe here)
+            k = k_ref[0, :, 0].astype(F32)            # [ps, hd] pool page
+            kq = quantize_fixed(k, int_bits, frac_bits)
+            v = v_ref[0, :, 0]
+        else:
+            # int8 pool: dequantize in register from the prefetched
+            # per-page scale — decoded values already sit on the grid
+            kc = k_ref[0, :, 0]                       # [ps, hd] int8 codes
+            ks = kscl_ref[pid_ref[b, j], n]
+            kq = jnp.where(kc == POISON_CODE, jnp.nan, kc.astype(F32)) * ks
+            v = v_ref[0, :, 0].astype(F32) * vscl_ref[pid_ref[b, j], n]
         s = jax.lax.dot_general(q, kq, (((1,), (1,)), ((), ())),
                                 preferred_element_type=F32)
         if approx:
@@ -83,7 +105,7 @@ def _kernel(pid_ref, logical_ref, cnt_ref, len_ref,   # scalar prefetch
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
         m_ref[...] = m_new
-        pv = jax.lax.dot_general(p.astype(v_ref.dtype), v_ref[0, :, 0],
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
                                  (((1,), (0,)), ((), ())),
                                  preferred_element_type=F32)
         acc_ref[...] = acc_ref[...] * corr + pv
@@ -100,6 +122,7 @@ def _kernel(pid_ref, logical_ref, cnt_ref, len_ref,   # scalar prefetch
 def hdp_paged_fum_decode(qq, k_pool, v_pool, page_ids, logical, counts,
                          keep, kv_len, *, approx: bool = True,
                          int_bits: int = 4, frac_bits: int = 12,
+                         k_scale=None, v_scale=None,
                          interpret: bool = False):
     """qq [B,N,G,Sq,hd] fixed-grid queries (Sq = 1 for plain decode, > 1
     for the speculative multi-query verify); k/v_pool [P,ps,N,hd] page
@@ -108,42 +131,71 @@ def hdp_paged_fum_decode(qq, k_pool, v_pool, page_ids, logical, counts,
     counts [B] int32 kept pages per row; keep [B,mk,N,G,Sq] int32
     per-query-row keep; kv_len [B] int32 valid KV extent of query row 0
     (row j's extent is kv_len + j: verify rows are consecutive
-    positions). Returns [B,N,G,Sq,hd] (head gate applied by the caller).
+    positions). ``k_scale``/``v_scale`` [P,N] fp32 mark a quantized pool
+    (int8 codes + per-page scales, dequantized in register from scalar
+    prefetch). Returns [B,N,G,Sq,hd] (head gate applied by the caller).
     Pages absent from ``page_ids`` are never read.
     """
     B, N, G, Sq, hd = qq.shape
     _, ps, _, _ = k_pool.shape
     mk = page_ids.shape[1]
-    kernel = functools.partial(
+    quantized = k_scale is not None
+    base = functools.partial(
         _kernel, scale=1.0 / (hd ** 0.5), approx=approx, int_bits=int_bits,
         frac_bits=frac_bits, ps=ps, max_keep=mk, n_q=Sq)
 
+    # scalar-prefetch operands: the page lists driving the BlockSpec
+    # index maps, plus (quantized pools) the per-page scales the kernel
+    # body reads at dequant time. Prefetch refs arrive positionally ahead
+    # of the tensor refs, so the quantized wrapper peels the two scale
+    # refs off into the keyword slots; the index-map lambdas take one ref
+    # per prefetch operand after the grid indices.
+    if quantized:
+        n_pref = 6
+
+        def kernel(pid, lg, c, le, ks, vs, *refs):
+            return base(pid, lg, c, le, *refs, kscl_ref=ks, vscl_ref=vs)
+
+        def imap(fn):
+            return lambda b, n, j, pid, lg, c, le, ks, vs: fn(b, n, j, pid)
+    else:
+        n_pref = 4
+        kernel = base
+
+        def imap(fn):
+            return lambda b, n, j, pid, lg, c, le: fn(b, n, j, pid)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=n_pref,
         grid=(B, N, mk),
         in_specs=[
             pl.BlockSpec((1, 1, G, Sq, hd),
-                         lambda b, n, j, pid, lg, c, le: (b, n, 0, 0, 0)),
+                         imap(lambda b, n, j, pid: (b, n, 0, 0, 0))),
             pl.BlockSpec((1, ps, 1, hd),
-                         lambda b, n, j, pid, lg, c, le: (pid[b, j], 0, n, 0)),
+                         imap(lambda b, n, j, pid: (pid[b, j], 0, n, 0))),
             pl.BlockSpec((1, ps, 1, hd),
-                         lambda b, n, j, pid, lg, c, le: (pid[b, j], 0, n, 0)),
+                         imap(lambda b, n, j, pid: (pid[b, j], 0, n, 0))),
             pl.BlockSpec((1, 1, 1, G, Sq),
-                         lambda b, n, j, pid, lg, c, le: (b, j, n, 0, 0)),
+                         imap(lambda b, n, j, pid: (b, j, n, 0, 0))),
         ],
         out_specs=pl.BlockSpec((1, 1, G, Sq, hd),
-                               lambda b, n, j, pid, lg, c, le: (b, n, 0, 0, 0)),
+                               imap(lambda b, n, j, pid: (b, n, 0, 0, 0))),
         scratch_shapes=[
             pltpu.VMEM((G * Sq, hd), F32),
             pltpu.VMEM((G * Sq, 1), F32),
             pltpu.VMEM((G * Sq, 1), F32),
         ],
     )
-    return pl.pallas_call(
+    call = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, N, G, Sq, hd), qq.dtype),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(page_ids, logical, counts, kv_len, qq, k_pool, v_pool, keep)
+    )
+    if quantized:
+        return call(page_ids, logical, counts, kv_len,
+                    k_scale.astype(F32), v_scale.astype(F32),
+                    qq, k_pool, v_pool, keep)
+    return call(page_ids, logical, counts, kv_len, qq, k_pool, v_pool, keep)

@@ -55,6 +55,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--attn-backend", default=None,
                     choices=["xla", "pallas"],
                     help="DEPRECATED: use --backend")
+    ap.add_argument("--kv-dtype", default="auto",
+                    choices=["auto", "fp32", "int8", "fp8_v"],
+                    help="paged KV pool storage format: int8 = per-page "
+                         "scaled int8 codes (the default store), fp8_v = "
+                         "int8 K + fp8 V, fp32 = the full-precision A/B "
+                         "oracle. auto honors REPRO_KV_DTYPE, else int8; "
+                         "dense layout always serves fp32")
     ap.add_argument("--calib", default=None,
                     help="override hdp calibration (the paged scout stores "
                          "a write-time int8 copy, i.e. calib-free)")
@@ -162,7 +169,8 @@ def run(args) -> dict:
 
     policy = getattr(args, "policy", None)
     spec = AttnSpec(backend=args.backend, layout=args.layout,
-                    policy=policy if policy is not None else "auto")
+                    policy=policy if policy is not None else "auto",
+                    kv_dtype=getattr(args, "kv_dtype", "auto"))
     if args.attn_backend is not None or args.cache_backend is not None:
         # one-release deprecation shim for the old string flags
         spec = spec_from_legacy(args.attn_backend, args.cache_backend,
@@ -261,6 +269,7 @@ def run(args) -> dict:
         "block_sparsity": round(s["block_sparsity"], 4),
         "head_sparsity": round(s["head_sparsity"], 4),
         "page_sparsity": round(s["page_sparsity"], 4),
+        "kv_dtype": s["kv_dtype"],
         "cache_bytes": s["cache_bytes"],
         "tokens_fp": tokens_fp,
         "spec_decode": s["spec_decode"],
@@ -307,6 +316,10 @@ def run(args) -> dict:
     if s["cache_backend"] == "paged":
         out["pages_peak"] = s["pages_peak"]
         out["pages_in_use"] = s["pages_in_use"]
+        # resident-footprint accounting by storage dtype: pool bytes over
+        # every leaf (codes + per-page scales) and the per-token rate
+        out["cache_bytes_pool"] = s["cache_bytes_pool"]
+        out["cache_bytes_per_token"] = round(s["cache_bytes_per_token"], 2)
         out["prefix_cache"] = s["prefix_cache"]
         if s["prefix_cache"]:
             out.update(prefix_hits=s["prefix_hits"],

@@ -25,7 +25,11 @@ from repro.attention import AttnCall, AttnSpec, attention
 from repro.core import blocking
 from repro.core.config import HDPConfig
 from repro.core.hdp import calibrated_split, decode_scout
-from repro.core.quant import quantize_and_split, quantize_fixed
+from repro.core.quant import (FRAC_SCOUT_SCALE, POISON_CODE, encode_pool,
+                              pool_int_bits, pool_scale, pool_view_finite,
+                              quantize_and_split, quantize_fixed,
+                              roundtrip_pool, scout_frac_codes,
+                              scout_int_codes)
 from repro.distribution.sharding import shard_activation as shd
 from repro.models import layers as L
 
@@ -405,14 +409,12 @@ def _fixed_split(x, hdp: HDPConfig):
 
 
 def scout_int8(k, hdp: HDPConfig):
-    """Write-time int8 scout copy of K (what FUM always streams)."""
-    return _fixed_split(k, hdp)[1].astype(jnp.int8)
+    """Write-time int8 scout copy of K (what FUM always streams).
 
-
-#: grid of the quantized-fraction scout copy (2^6: fractions in (-1, 1)
-#: scale to +/-64, inside int8 range). Coarser than the cache's
-#: ``frac_bits`` on purpose — the draft only needs argmax-grade scores.
-FRAC_SCOUT_SCALE = 64.0
+    Thin config-aware wrapper over the shared ``core.quant`` pool-quant
+    module — the SAME codes a quantized pool derives as its stage-1
+    view, so fp32 and int8 pools scout on identical grids."""
+    return scout_int_codes(k, hdp.int_bits, hdp.frac_bits)
 
 
 def scout_frac_int8(k, hdp: HDPConfig):
@@ -420,10 +422,21 @@ def scout_frac_int8(k, hdp: HDPConfig):
 
     The self-speculative draft reconstructs near-exact approximate scores
     from the two int8 copies alone (``QQ·IK + IQ·FK^``), so a draft step
-    never reads the full-precision K pool; stored only when the engine
-    speculates."""
-    return jnp.round(
-        _fixed_split(k, hdp)[2] * FRAC_SCOUT_SCALE).astype(jnp.int8)
+    never reads the full-precision K pool; stored only when a fp32-pool
+    engine speculates (quantized pools derive the fraction view from
+    their codes instead)."""
+    return scout_frac_codes(k, hdp.int_bits, hdp.frac_bits)
+
+
+def _dequant_pages(pages, scale):
+    """Gathered pool pages [..., ps, N, hd] + per-page scales [..., N]
+    -> fp32 values; the POISON_CODE sentinel (int8 pools) and a NaN page
+    scale both surface as NaN (the stage-3 poison tripwires)."""
+    if pages.dtype == jnp.int8:
+        vals = jnp.where(pages == POISON_CODE, jnp.nan, pages.astype(F32))
+    else:  # fp8 V: the exponent does the scale's job (scale stays 1.0)
+        vals = pages.astype(F32)
+    return vals * scale[..., None, :, None].astype(F32)
 
 
 def resolve_write_pages(positions, page_table, page_size, write_floor=None):
@@ -450,12 +463,14 @@ def resolve_write_pages(positions, page_table, page_size, write_floor=None):
 
 def _paged_scan_attention(qq, fq, k_pool, v_pool, gather_idx, keep, valid,
                           head_kept, *, hdp: HDPConfig, ps: int, cpp: int,
-                          scale: float):
+                          scale: float, k_scale=None, v_scale=None):
     """Stage 2+3 as an online-softmax scan over page chunks.
 
     Peak stage-2 memory is O(B * cpp * ps) — one chunk of gathered pages —
     instead of the O(B * Sk) dense materialization; pruned pages stay
     scratch-redirected, so their full-precision memory is never read.
+    Quantized pools dequantize per chunk (``k_scale``/``v_scale`` are the
+    per-page scale arrays), so dequantized tiles never round-trip HBM.
     Reduction order differs from the one-shot dense softmax by page-chunk
     grouping (ULP-level output differences across the chunk boundary).
     """
@@ -482,8 +497,14 @@ def _paged_scan_attention(qq, fq, k_pool, v_pool, gather_idx, keep, valid,
     def body(carry, xs):
         m, l, acc = carry
         idx_i, keep_i, valid_i = xs
-        k_i = k_pool[idx_i].reshape(B, cpp * ps, N, hd)
-        v_i = v_pool[idx_i].reshape(B, cpp * ps, N, hd)
+        if k_scale is not None:
+            k_i = _dequant_pages(k_pool[idx_i], k_scale[idx_i])
+            v_i = _dequant_pages(v_pool[idx_i], v_scale[idx_i])
+            k_i = k_i.reshape(B, cpp * ps, N, hd)
+            v_i = v_i.reshape(B, cpp * ps, N, hd)
+        else:
+            k_i = k_pool[idx_i].reshape(B, cpp * ps, N, hd)
+            v_i = v_pool[idx_i].reshape(B, cpp * ps, N, hd)
         kq_i, _, fk_i = _fixed_split(k_i, hdp)
         s = jnp.einsum("bngqh,bsnh->bngqs", qq, kq_i,
                        preferred_element_type=F32)
@@ -509,7 +530,8 @@ def _paged_scan_attention(qq, fq, k_pool, v_pool, gather_idx, keep, valid,
 
 
 def _paged_fum_kernel_stage3(qq, k_pool, v_pool, table, keep, head_kept,
-                             q_pos, fetched, *, hdp: HDPConfig, ps: int):
+                             q_pos, fetched, *, hdp: HDPConfig, ps: int,
+                             k_scale=None, v_scale=None):
     """Stage 2+3 through the gather-free Pallas kernel.
 
     Compresses the OR-over-heads (and, for multi-query verify, OR-over-
@@ -547,7 +569,8 @@ def _paged_fum_kernel_stage3(qq, k_pool, v_pool, table, keep, head_kept,
     out = hdp_paged_fum_decode(
         qq, k_pool, v_pool, page_ids, logical, counts,
         keep_in, kv_len, approx=hdp.approx, int_bits=hdp.int_bits,
-        frac_bits=hdp.frac_bits, interpret=_auto_interpret(None))
+        frac_bits=hdp.frac_bits, k_scale=k_scale, v_scale=v_scale,
+        interpret=_auto_interpret(None))
     return _head_gate(out, head_kept)
 
 
@@ -556,12 +579,22 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
                                return_stats: bool = False,
                                stage3: str = "xla", page_chunk: int = 128,
                                draft=None, per_query: bool = False,
-                               fk_pool=None):
+                               fk_pool=None, k_scale=None, v_scale=None):
     """HDP decode over a block-paged KV cache — the FUM dataflow in XLA.
 
     q [B,N,G,Sq,hd]; k/v_pool [P,ps,N,hd] page pools (page 0 is the
     reserved scratch page); ik_pool [P,ps,N,hd] int8 scout copy of K;
     table [B,nP] int32 page table (0-padded).
+
+    An int8 ``k_pool`` switches on the quantized-pool path:
+    ``k_scale``/``v_scale`` [P, N] carry the per-page scales, ``ik_pool``
+    and ``fk_pool`` are ignored — the integer and fraction scout copies
+    are *derived as views of the codes* (finite even for poisoned
+    pages/positions, like the separate fp32-pool copies they replace) —
+    and every stage-3 consumer dequantizes in place of its gather, so
+    pruned pages still never DMA. Decoded values land exactly on the
+    fixed-point grid stage 3 snaps K to, so the downstream maths is
+    shared verbatim with the fp32 path.
 
     Stage 1 streams the int8 scout copy for EVERY allocated page (the
     paper's always-read integer pass), pools it into per-page importances
@@ -597,9 +630,18 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
     nP = table.shape[1]
     Sk = nP * ps
     scale = 1.0 / (hd ** 0.5)
+    quantized = k_pool.dtype == jnp.int8
 
     # ---- stage 1: integer scout on the always-streamed int8 copy ----
-    ik = ik_pool[table].reshape(B, Sk, N, hd).astype(F32)
+    if quantized:
+        # the pool's codes ARE the scout stream: the finite static-grid
+        # view (poison sentinels -> 0, masked anyway) truncates to the
+        # same integer parts the fp32 pools' write-time copy stored
+        k_fin = pool_view_finite(k_pool[table], hdp.int_bits)
+        k_fin = k_fin.reshape(B, Sk, N, hd)
+        ik = jnp.trunc(k_fin)
+    else:
+        ik = ik_pool[table].reshape(B, Sk, N, hd).astype(F32)
     qq, iq, fq = _fixed_split(q, hdp)
     s_int = jnp.einsum("bngqh,bsnh->bngqs", iq, ik, preferred_element_type=F32)
     valid = _mask_bias(q_pos, k_pos, hdp.causal, window)
@@ -633,7 +675,12 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
         # pages (scratch-redirect)
         s = s_int
         if draft.scores == "scout":
-            if fk_pool is None:
+            if quantized:
+                # the fraction view comes straight off the codes (exact:
+                # the coarse pool grid is a subset of the 2^-6 scout
+                # grid), so no separate fraction pool exists to read
+                fkh = k_fin - ik
+            elif fk_pool is None:
                 # the IQ·FK^ term cannot be derived without reading the
                 # full-precision pool — which is exactly what this score
                 # mode promises never to do; surface the misuse instead
@@ -642,29 +689,42 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
                     'draft scores="scout" needs the f_scout pool '
                     "(PagedKVCache(draft_scout=True)); pass fk_pool or "
                     'use scores="int"')
-            fkh = fk_pool[table].reshape(B, Sk, N, hd).astype(F32) \
-                / FRAC_SCOUT_SCALE
+            else:
+                fkh = fk_pool[table].reshape(B, Sk, N, hd).astype(F32) \
+                    / FRAC_SCOUT_SCALE
             s = s + jnp.einsum("bngqh,bsnh->bngqs", fq, ik,
                                preferred_element_type=F32) \
                   + jnp.einsum("bngqh,bsnh->bngqs", iq, fkh,
                                preferred_element_type=F32)
         gather_idx = jnp.where(fetched, table, 0)         # pruned -> scratch
-        v = v_pool[gather_idx].reshape(B, Sk, N, hd)
+        if quantized:
+            v = _dequant_pages(v_pool[gather_idx], v_scale[gather_idx])
+            v = v.reshape(B, Sk, N, hd)
+        else:
+            v = v_pool[gather_idx].reshape(B, Sk, N, hd)
         out = _approx_block_attention(None, None, None, None, v, keep, valid,
                                       head_kept, block_k=ps, scale=scale,
                                       approx=False, scores=s)
     elif stage3 == "pallas_paged":
         out = _paged_fum_kernel_stage3(qq, k_pool, v_pool, table, keep,
                                        head_kept, q_pos, fetched,
-                                       hdp=hdp, ps=ps)
+                                       hdp=hdp, ps=ps,
+                                       k_scale=k_scale if quantized else None,
+                                       v_scale=v_scale if quantized else None)
     elif stage3 == "pallas_block":
         from repro.kernels.hdp_block_attn import hdp_block_sparse_attention
         from repro.kernels.ops import _auto_interpret
         from repro.kernels.ref import keep_mask_to_indices
 
         gather_idx = jnp.where(fetched, table, 0)         # pruned -> scratch
-        k = k_pool[gather_idx].reshape(B, Sk, N, hd)
-        v = v_pool[gather_idx].reshape(B, Sk, N, hd)
+        if quantized:
+            k = _dequant_pages(k_pool[gather_idx], k_scale[gather_idx])
+            v = _dequant_pages(v_pool[gather_idx], v_scale[gather_idx])
+            k = k.reshape(B, Sk, N, hd)
+            v = v.reshape(B, Sk, N, hd)
+        else:
+            k = k_pool[gather_idx].reshape(B, Sk, N, hd)
+            v = v_pool[gather_idx].reshape(B, Sk, N, hd)
         H = N * G
         def per_head(x):  # [B,Sk,N,hd] -> [B,H,Sk,hd]
             xh = jnp.repeat(x.transpose(0, 2, 1, 3), G, axis=1)
@@ -692,8 +752,14 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
             # one chunk covers the context: gather kept pages into a slab
             # and reduce exactly like the dense-layout decode (keeps paged
             # and dense engines token-identical on short contexts)
-            k = k_pool[gather_idx].reshape(B, Sk, N, hd)
-            v = v_pool[gather_idx].reshape(B, Sk, N, hd)
+            if quantized:
+                k = _dequant_pages(k_pool[gather_idx], k_scale[gather_idx])
+                v = _dequant_pages(v_pool[gather_idx], v_scale[gather_idx])
+                k = k.reshape(B, Sk, N, hd)
+                v = v.reshape(B, Sk, N, hd)
+            else:
+                k = k_pool[gather_idx].reshape(B, Sk, N, hd)
+                v = v_pool[gather_idx].reshape(B, Sk, N, hd)
             kq, _, fk = _fixed_split(k, hdp)
             out = _approx_block_attention(qq, fq, kq, fk, v, keep, valid,
                                           head_kept, block_k=ps, scale=scale,
@@ -701,7 +767,9 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
         else:
             out = _paged_scan_attention(qq, fq, k_pool, v_pool, gather_idx,
                                         keep, valid, head_kept, hdp=hdp,
-                                        ps=ps, cpp=cpp, scale=scale)
+                                        ps=ps, cpp=cpp, scale=scale,
+                                        k_scale=k_scale if quantized else None,
+                                        v_scale=v_scale if quantized else None)
 
     stats = None
     if return_stats:
@@ -820,6 +888,23 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
         if cfg.pos_emb == "rope" and enc_out is None:
             k = L.apply_rope(k, positions, cfg.rope_theta)
 
+        if (attn is not None and attn.kv_dtype in ("int8", "fp8_v")
+                and mode == "prefill" and enc_out is None
+                and cache is not None and "k_pages" not in cache):
+            # quantized-pool engine prefilling its dense REQUEST cache:
+            # round-trip K/V through the pool grid BEFORE the write, so
+            # prefill attention (which reads this cache), the pool insert
+            # (exact encode of these values), prefix-cache gathers and
+            # COW tails all see one set of values — hot and cold runs
+            # stay token-identical, and only the fp32-vs-int8 A/B sees
+            # quantization drift
+            ib = pool_int_bits(cfg.hdp)
+            k = roundtrip_pool(k, ib).astype(k.dtype)
+            if attn.kv_dtype == "fp8_v":
+                v = v.astype(jnp.float8_e4m3fn).astype(v.dtype)
+            else:
+                v = roundtrip_pool(v, ib).astype(v.dtype)
+
         if cache is not None and "k_pages" in cache:
             # block-paged serving cache (decode only): scatter the S
             # tokens' K/V (+ int8 scout copy) into their slots' pages
@@ -832,13 +917,23 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
             pidx = resolve_write_pages(positions, page_table, ps,
                                        write_floor)
             off = positions % ps
-            new_cache = {
-                "k_pages": cache["k_pages"].at[pidx, off].set(
-                    k.astype(cache["k_pages"].dtype)),
-                "v_pages": cache["v_pages"].at[pidx, off].set(
-                    v.astype(cache["v_pages"].dtype)),
-            }
-            if draft is not None and draft.scores != "approx" \
+            pool_q = cache["k_pages"].dtype == jnp.int8
+            if pool_q:
+                ib = pool_int_bits(cfg.hdp)
+                k_store = encode_pool(k, ib)
+                v_store = (v.astype(cache["v_pages"].dtype)
+                           if cache["v_pages"].dtype != jnp.int8
+                           else encode_pool(v, ib))
+            else:
+                k_store = k.astype(cache["k_pages"].dtype)
+                v_store = v.astype(cache["v_pages"].dtype)
+            new_cache = {**cache,
+                         "k_pages": cache["k_pages"].at[pidx, off].set(
+                             k_store),
+                         "v_pages": cache["v_pages"].at[pidx, off].set(
+                             v_store)}
+            if not pool_q and draft is not None \
+                    and draft.scores != "approx" \
                     and cfg.hdp is not None and cfg.hdp.enabled:
                 # a scout-scores draft neither reads nor needs the
                 # full-precision K it would stage: later draft steps
@@ -847,7 +942,9 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
                 # can read it — skip the dead scatter. Gated on HDP like
                 # the call descriptor (build_attn_call nulls draft
                 # without a scout): the HDP-off degraded draft runs
-                # exact attention and DOES read this K
+                # exact attention and DOES read this K. A QUANTIZED pool
+                # inverts the optimization: the codes ARE the scout copy
+                # later draft steps stream, so the scatter is live
                 new_cache["k_pages"] = cache["k_pages"]
             if "k_scout" in cache:
                 new_cache["k_scout"] = cache["k_scout"].at[pidx, off].set(

@@ -147,6 +147,12 @@ STREAM_ENV = "REPRO_STREAM_SCHED"
 #: degrades silently when speculative decode itself is off).
 ADAPTIVE_ENV = "REPRO_ADAPTIVE_SPEC"
 
+#: env var giving the paged pool's KV storage dtype when the AttnSpec
+#: leaves ``kv_dtype="auto"`` (explicit specs win; "int8" when unset —
+#: the quantized pool is the production default and fp32 the opt-in
+#: A/B oracle). Dense layouts always serve fp32.
+KV_DTYPE_ENV = "REPRO_KV_DTYPE"
+
 
 @dataclasses.dataclass
 class Request:
@@ -301,6 +307,20 @@ class Engine:
         if layout == "paged" and cfg.family not in PAGEABLE_FAMILIES:
             raise ValueError(
                 f"family {cfg.family!r} has no KV pages; use dense layout")
+        kv_dtype = spec.kv_dtype
+        if kv_dtype == "auto":
+            kv_dtype = os.environ.get(KV_DTYPE_ENV, "") or "int8"
+            if kv_dtype not in kv_cache.KV_DTYPES:
+                raise ValueError(
+                    f"{KV_DTYPE_ENV}={kv_dtype!r}: must be one of "
+                    f"{kv_cache.KV_DTYPES}")
+        if layout != "paged":
+            kv_dtype = "fp32"     # dense slot caches have no quantized store
+        # pin the resolved dtype back into the spec: attn_apply keys its
+        # prefill round-trip (and nothing else) off attn.kv_dtype, so the
+        # spec the jits close over must carry the concrete value
+        spec = spec.replace(kv_dtype=kv_dtype)
+        self.kv_dtype = kv_dtype
         if (layout == "paged" and cfg.hdp is not None
                 and cfg.hdp.enabled and cfg.hdp.calib != "none"):
             # write-time scout quantization cannot honor a data-dependent
@@ -368,11 +388,9 @@ class Engine:
         if self.policy == "cost":
             from repro.autotune import default_tuner
             self.tuner = default_tuner()
-        # static retrace token for the decode/spec jits: bumped when a
-        # flushed probe flips a tuner decision, so exactly the affected
-        # programs re-trace (and re-consult the tuner). Prefill decisions
-        # stay fixed for the engine's lifetime — admission jits carry no
-        # epoch (a bounded, documented limitation).
+        # static retrace token for the decode/spec AND prefill/chunk jits:
+        # bumped when a flushed probe flips a tuner decision, so exactly
+        # the affected programs re-trace (and re-consult the tuner).
         self._attn_epoch = 0
         if decode_horizon is None:
             decode_horizon = int(os.environ.get(HORIZON_ENV, "1") or 1)
@@ -390,9 +408,11 @@ class Engine:
                 cfg, max_batch, max_len, page_size=page_size,
                 num_pages=num_pages,
                 # the draft's scores come from the int8 scout copies; the
-                # quantized-fraction copy is only worth pool memory when
-                # the engine actually speculates with scout-copy scores
-                draft_scout=self.spec and self.draft_profile.scores == "scout")
+                # quantized-fraction copy is only worth pool memory when a
+                # *fp32* pool speculates with scout-copy scores (quantized
+                # pools derive both scout views from the codes for free)
+                draft_scout=self.spec and self.draft_profile.scores == "scout",
+                kv_dtype=kv_dtype)
         else:
             # speculative rounds stage writes up to draft_len - 1 positions
             # past the commit frontier before rolling back; the dense slot
@@ -441,8 +461,9 @@ class Engine:
         # insert copy remains on the admission path.
         self._prefill_jit = jax.jit(
             self._prefill_paged_fn if self.paged else self._prefill_dense_fn,
-            static_argnums=(2,), donate_argnums=(3,))
-        self._chunk_jit = jax.jit(self._prefill_chunk_fn, donate_argnums=(2,))
+            static_argnums=(2, 3), donate_argnums=(4,))
+        self._chunk_jit = jax.jit(self._prefill_chunk_fn,
+                                  static_argnums=(2,), donate_argnums=(3,))
         # static argnums: scan length / draft plan + the attention epoch
         # (cost-policy retrace token); the spec round also threads the
         # round's DraftProfile statically so the adaptive controller can
@@ -496,20 +517,24 @@ class Engine:
             collect_stats=self.collect_stats, attn=self.attn_spec)
         return new_cache, stats
 
-    def _prefill_paged_fn(self, params, tokens, bucket_len, pool, page_idx):
+    def _prefill_paged_fn(self, params, tokens, bucket_len, epoch, pool,
+                          page_idx):
         """Batched prefill fused with the page scatter, pool donated.
 
         ``page_idx`` [nb, pages_per_slot]: destination pool page per
         request-cache page (0-padded — the scratch page absorbs bucket
         padding, exactly as in `PagedKVCache.insert`)."""
+        del epoch  # static retrace token only — selection reruns per trace
         one_cache, stats = self._prefill_body(params, tokens, bucket_len)
         for r in range(tokens.shape[0]):
             pool = self.pages._insert_fn(pool, one_cache["k"],
                                          one_cache["v"], page_idx[r], r)
         return pool, stats
 
-    def _prefill_dense_fn(self, params, tokens, bucket_len, slot_cache, slots):
+    def _prefill_dense_fn(self, params, tokens, bucket_len, epoch,
+                          slot_cache, slots):
         """Batched prefill fused with the slot insert, slot cache donated."""
+        del epoch
         one_cache, stats = self._prefill_body(params, tokens, bucket_len)
         for r in range(tokens.shape[0]):
             slot_cache = kv_cache.insert_slot(slot_cache, one_cache,
@@ -517,7 +542,8 @@ class Engine:
                                               row=r)
         return slot_cache, stats
 
-    def _prefill_chunk_fn(self, params, tokens, cache, offset):
+    def _prefill_chunk_fn(self, params, tokens, epoch, cache, offset):
+        del epoch  # static retrace token only
         _, new_cache, stats = registry.apply_prefill(
             self.cfg, params, {"tokens": tokens}, cache,
             collect_stats=self.collect_stats, pos_offset=offset,
@@ -629,7 +655,14 @@ class Engine:
         are never fetched (gathers read scratch in their place) while
         its softmax still runs before the gate zeroes the output, so
         NaN in scratch K becomes NaN * 0 = NaN in the head gate and
-        poisons every downstream activation."""
+        poisons every downstream activation.
+
+        Quantized pools have no NaN to write — the reserved int8 code
+        -128 is the position-granular sentinel instead: stage 3 decodes
+        it to NaN (the same tripwire), while the derived scout views map
+        it to 0 (finite scores, exactly like the fp32 pools' separate
+        finite scout copies)."""
+        from repro.core.quant import POISON_CODE
         from repro.models.attention import resolve_write_pages
         steps = jnp.arange(k, dtype=I32)
         stale = pos[:, None] + steps[None]                  # [B, k]
@@ -640,9 +673,11 @@ class Engine:
             reject = reject & (ent != 0)     # never poison the scratch page
             off = stale % ps
             kp = cache["k_pages"]                           # [L, P, ps, N, hd]
+            poison = (jnp.asarray(POISON_CODE, kp.dtype)
+                      if kp.dtype == jnp.int8
+                      else jnp.asarray(jnp.nan, kp.dtype))
             cur = kp[:, ent, off]                           # [L, B, k, N, hd]
-            val = jnp.where(reject[None, :, :, None, None],
-                            jnp.asarray(jnp.nan, cur.dtype), cur)
+            val = jnp.where(reject[None, :, :, None, None], poison, cur)
             return {**cache, "k_pages": kp.at[:, ent, off].set(val)}
         kc = cache["k"]                                     # [L, B, S, N, hd]
         b = jnp.arange(kc.shape[1])[:, None]
@@ -945,7 +980,8 @@ class Engine:
         cache = store.take()                       # donated to the jit below
         try:
             new_cache, stats = self._prefill_jit(
-                self.params, jnp.asarray(toks), bucket, cache, scatter)
+                self.params, jnp.asarray(toks), bucket, self._attn_epoch,
+                cache, scatter)
         except BaseException:
             store.restore_if_undonated(cache)
             for slot in slots:                     # roll admission back
@@ -984,7 +1020,8 @@ class Engine:
         piece = np.full((1, clen), prompt[plen - 1], np.int32)
         piece[0, :min(rem, clen)] = prompt[off:off + clen]
         cache, stats = self._chunk_jit(
-            self.params, jnp.asarray(piece), cache, jnp.asarray(off, I32))
+            self.params, jnp.asarray(piece), self._attn_epoch, cache,
+            jnp.asarray(off, I32))
         self._record_stats(stats)
         self.metrics["prefill_tokens"] += clen
         return cache, off + clen
@@ -1279,11 +1316,11 @@ class Engine:
         """Flush pending tuner probes (host side, between device steps).
 
         A measured winner that flips a standing cost decision bumps the
-        attention epoch — a static argument of the decode/spec jits — so
-        exactly the affected programs re-trace once and re-consult the
-        tuner. Called at the top of every step and by the stream
-        scheduler when a recycled slot re-enters the batch. No-op under
-        static policy."""
+        attention epoch — a static argument of the decode/spec AND
+        prefill/chunk jits — so exactly the affected programs re-trace
+        once and re-consult the tuner. Called at the top of every step
+        and by the stream scheduler when a recycled slot re-enters the
+        batch. No-op under static policy."""
         if self.tuner is not None and self.tuner.flush_probes():
             self._attn_epoch += 1
 
@@ -1666,6 +1703,8 @@ class Engine:
             # counts shared pages ONCE — the whole point of sharing.
             m["cache_bytes"] = self.pages.active_bytes(self.pages.peak_pages)
             m["cache_bytes_pool"] = self.pages.pool_bytes()
+            m["kv_dtype"] = self.kv_dtype
+            m["cache_bytes_per_token"] = self.pages.bytes_per_token()
             m["pages_peak"] = self.pages.peak_pages
             m["pages_in_use"] = self.pages.pages_in_use
             m["page_size"] = self.pages.page_size
@@ -1678,4 +1717,5 @@ class Engine:
                 m["pages_cached"] = self.prefix.cached_pages
         else:
             m["cache_bytes"] = kv_cache.cache_bytes(self.slots.cache)
+            m["kv_dtype"] = "fp32"
         return m

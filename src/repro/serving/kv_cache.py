@@ -23,8 +23,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quant import (POISON_CODE, encode_pool, pool_int_bits,
+                              pool_scale)
 from repro.models import registry
 from repro.serving.allocator import PageAllocator
+
+#: storage formats of the paged pool: int8 codes + per-page scale (the
+#: production default), int8 K + fp8 V, or the fp32 A/B oracle.
+KV_DTYPES = ("fp32", "int8", "fp8_v")
 
 
 class DonatedCacheError(RuntimeError):
@@ -189,11 +195,28 @@ class PagedKVCache(_DonatableCache):
 
     Layout: ``k_pages``/``v_pages`` are [L, P, page_size, N, hd] pools
     shared by every slot; a host-side page table maps slot -> page ids.
-    With HDP enabled an int8 ``k_scout`` pool rides along — the
-    write-time-quantized integer copy of K that the decode scout always
-    streams, so the full-precision K/V of pruned pages is never gathered
-    (the Fetch-Upon-Mask contract; see
-    ``attention.hdp_paged_decode_attention``).
+
+    ``kv_dtype`` selects the pool storage format:
+
+    * ``"int8"`` (default) — K and V stored as int8 codes on the static
+      power-of-two grid (``core.quant.pool_scale``), with per-page
+      (per-kv-head) scale arrays ``k_scale``/``v_scale`` [L, P, N]
+      written at insert/COW time. The integer and quantized-fraction
+      scout copies the decode scout and the self-speculative draft
+      stream are *derived views of the codes* (``pool_view_finite``) —
+      no extra pools — so drafts, prefix-cached pages and COW tails all
+      share one quantized store, and resident cache bytes drop ~4x.
+      Dequant is fused into the consumers (gather-time in the XLA
+      page-chunk scan, in-register in the Pallas FUM kernel), so pruned
+      pages still never DMA.
+    * ``"fp8_v"`` — int8 K as above, V stored as float8_e4m3fn (scale
+      1.0: the fp8 exponent replaces the per-page scale's job).
+    * ``"fp32"`` — the full-precision pool, demoted to an opt-in A/B
+      oracle. With HDP enabled an int8 ``k_scout`` pool rides along —
+      the write-time-quantized integer copy of K that the decode scout
+      always streams, so the full-precision K/V of pruned pages is never
+      gathered (the Fetch-Upon-Mask contract; see
+      ``attention.hdp_paged_decode_attention``).
 
     Page 0 is a reserved *scratch* page: pruned pages' gather indices and
     inactive slots' decode writes are redirected there, so its contents
@@ -218,33 +241,49 @@ class PagedKVCache(_DonatableCache):
     mutations (``insert``, ``cow``) run through donated jits — the pool
     is aliased in place, never copied per call.
 
-    ``poison_freed`` (debug): NaN-poison a page's full-precision K on
-    *true free only* — a stale unmasked read of a freed page then
-    surfaces as NaN in the scores, while a page still shared by any
-    owner is never poisoned. K-only: V of positions the mask excludes
-    is multiplied by an exact 0 but still *read* by XLA, so V-poison
-    would leak NaN through legitimate masked reads of reused pages.
+    ``poison_freed`` (debug): poison a page's full-precision K on *true
+    free only* — a stale unmasked read of a freed page then surfaces as
+    NaN in the scores, while a page still shared by any owner is never
+    poisoned. fp32 pools write NaN into ``k_pages``; quantized pools
+    write a NaN *sentinel scale* instead (poison must survive
+    quantization — NaN has no int8 code), which poisons every stage-3
+    dequant of the page while the static-grid scout views stay finite
+    (mirroring fp32, where the scout copies were never poisoned). K-only
+    either way: V of positions the mask excludes is multiplied by an
+    exact 0 but still *read* by XLA, so V-poison would leak NaN through
+    legitimate masked reads of reused pages. Reused pages recover their
+    scale on first write (insert scatter or the decode scatter's
+    scale refresh).
     """
 
     def __init__(self, cfg, batch: int, max_len: int,
                  page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
                  poison_freed: bool = False,
-                 draft_scout: bool = False):
+                 draft_scout: bool = False,
+                 kv_dtype: str = "int8"):
         hdp = cfg.hdp
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}")
+        self.kv_dtype = kv_dtype
+        self.quantized = kv_dtype != "fp32"
         self.scout = hdp is not None and hdp.enabled
-        #: also store the int8 quantized-fraction copy of K at write time
-        #: (``f_scout``): the self-speculative draft reconstructs its
-        #: scores from the two int8 copies alone, so draft steps never
-        #: read the full-precision K pool. Only allocated on request —
-        #: non-speculating engines pay no extra pool memory.
+        #: fp32 pools also store the int8 quantized-fraction copy of K at
+        #: write time (``f_scout``) when asked: the self-speculative
+        #: draft reconstructs its scores from the two int8 copies alone,
+        #: so draft steps never read the full-precision K pool. Only
+        #: allocated on request — non-speculating engines pay no extra
+        #: pool memory. Quantized pools derive both scout copies from
+        #: the codes instead, so the flag allocates nothing there.
         self.draft_scout = draft_scout and self.scout
         ps = page_size or (hdp.block_k if self.scout else 16)
         if self.scout and ps != hdp.block_k:
             raise ValueError(
                 f"page_size {ps} must equal hdp.block_k {hdp.block_k} so "
                 "pages coincide with the scout's pruning blocks")
-        if self.scout and hdp.int_bits > 6:
+        if (self.scout or self.quantized) and hdp is not None \
+                and hdp.enabled and hdp.int_bits > 6:
             raise ValueError(
                 f"int_bits={hdp.int_bits} exceeds the int8 scout copy's "
                 "range (integer parts reach +/-2^int_bits; need <= 6)")
@@ -256,17 +295,33 @@ class PagedKVCache(_DonatableCache):
         self.num_pages = (1 + batch * self.pages_per_slot
                           if num_pages is None else num_pages)
         self.poison_freed = poison_freed
+        self.int_bits = pool_int_bits(hdp)
         L, N, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
         dt = jnp.dtype(cfg.dtype)
         shape = (L, self.num_pages, ps, N, hd)
-        self.cache: Dict[str, jnp.ndarray] = {
-            "k_pages": jnp.zeros(shape, dt),
-            "v_pages": jnp.zeros(shape, dt),
-        }
-        if self.scout:
-            self.cache["k_scout"] = jnp.zeros(shape, jnp.int8)
-        if self.draft_scout:
-            self.cache["f_scout"] = jnp.zeros(shape, jnp.int8)
+        if self.quantized:
+            v_dt = jnp.dtype(jnp.float8_e4m3fn) if kv_dtype == "fp8_v" \
+                else jnp.dtype(jnp.int8)
+            s0 = pool_scale(self.int_bits)
+            self.cache: Dict[str, jnp.ndarray] = {
+                "k_pages": jnp.zeros(shape, jnp.int8),
+                "v_pages": jnp.zeros(shape, v_dt),
+                # per-page per-kv-head scales; the scratch page's stays
+                # the static grid scale forever (finite by contract)
+                "k_scale": jnp.full((L, self.num_pages, N), s0, jnp.float32),
+                "v_scale": jnp.full((L, self.num_pages, N),
+                                    1.0 if kv_dtype == "fp8_v" else s0,
+                                    jnp.float32),
+            }
+        else:
+            self.cache = {
+                "k_pages": jnp.zeros(shape, dt),
+                "v_pages": jnp.zeros(shape, dt),
+            }
+            if self.scout:
+                self.cache["k_scout"] = jnp.zeros(shape, jnp.int8)
+            if self.draft_scout:
+                self.cache["f_scout"] = jnp.zeros(shape, jnp.int8)
         self.allocator = PageAllocator(self.num_pages, reserved=1,
                                        on_free=self._on_free)
         self._slot_pages: Dict[int, List[int]] = {}
@@ -322,6 +377,15 @@ class PagedKVCache(_DonatableCache):
         self._table[slot, :len(pages)] = pages
         self._table_dev = None
         self.peak_pages = max(self.peak_pages, self.pages_in_use)
+        if self.poison_freed and self.quantized and pages:
+            # a quantized pool's freed-page poison is the NaN sentinel
+            # scale; revive it the moment the page re-enters a table row
+            # (insert/COW also rewrite it, but decode-growth pages are
+            # first touched by the scatter, which writes codes only)
+            idx = jnp.asarray(pages, jnp.int32)
+            s0 = pool_scale(self.int_bits)
+            self.cache = {**self.cache,
+                          "k_scale": self.cache["k_scale"].at[:, idx].set(s0)}
 
     def alloc(self, slot: int, n_tokens: int) -> List[int]:
         """Reserve fresh pages for `n_tokens` cache positions of `slot`."""
@@ -345,9 +409,29 @@ class PagedKVCache(_DonatableCache):
     def _on_free(self, pages: List[int]) -> None:
         if self.poison_freed and pages:
             idx = jnp.asarray(pages, jnp.int32)
-            self.cache = {**self.cache,
-                          "k_pages": self.cache["k_pages"].at[:, idx].set(
-                              jnp.nan)}
+            if self.quantized:
+                # NaN has no int8 code — poison travels through the
+                # per-page sentinel scale (every dequant of the page goes
+                # NaN; the static-grid scout views stay finite, same as
+                # the fp32 pools' unpoisoned scout copies)
+                self.cache = {**self.cache,
+                              "k_scale": self.cache["k_scale"].at[
+                                  :, idx].set(jnp.nan)}
+            else:
+                self.cache = {**self.cache,
+                              "k_pages": self.cache["k_pages"].at[:, idx].set(
+                                  jnp.nan)}
+
+    def poison_view(self) -> np.ndarray:
+        """Elementwise poison marks of K, shaped like ``k_pages`` — the
+        dtype-independent introspection the debug tests assert on (NaN
+        under fp32; the -128 sentinel code or a NaN page scale under a
+        quantized pool)."""
+        kp = np.asarray(self.cache["k_pages"])
+        if not self.quantized:
+            return np.isnan(kp)
+        scl = np.isnan(np.asarray(self.cache["k_scale"]))  # [L, P, N]
+        return (kp == POISON_CODE) | scl[:, :, None, :, None]
 
     # -------------------------------------------------------------- insert
     def _row_to_pages(self, k, row, npg):
@@ -375,6 +459,20 @@ class PagedKVCache(_DonatableCache):
         kp = self._row_to_pages(k, row, npg)
         vp = self._row_to_pages(v, row, npg)
         flat = idx[:npg].astype(jnp.int32)
+        if self.quantized:
+            s0 = pool_scale(self.int_bits)
+            vq = vp.astype(pool["v_pages"].dtype) \
+                if self.kv_dtype == "fp8_v" else encode_pool(vp, self.int_bits)
+            # scales are (re)written with the codes, so a reused page
+            # sheds any freed-poison sentinel the moment it holds data
+            return {
+                "k_pages": pool["k_pages"].at[:, flat].set(
+                    encode_pool(kp, self.int_bits)),
+                "v_pages": pool["v_pages"].at[:, flat].set(vq),
+                "k_scale": pool["k_scale"].at[:, flat].set(s0),
+                "v_scale": pool["v_scale"].at[:, flat].set(
+                    1.0 if self.kv_dtype == "fp8_v" else s0),
+            }
         new = {
             "k_pages": pool["k_pages"].at[:, flat].set(
                 kp.astype(pool["k_pages"].dtype)),
@@ -417,27 +515,40 @@ class PagedKVCache(_DonatableCache):
         self._donating(self._cow_jit, jnp.asarray(src, jnp.int32),
                        jnp.asarray(dst, jnp.int32))
 
-    def _gather_fn(self, kp, vp, idx):
+    def _gather_fn(self, pool, idx):
         """Pool pages -> contiguous [L, 1, max_len, N, hd] request cache.
 
         Positions past the real prefix read the scratch page: arbitrary
         but finite, and masked to an exact-zero contribution by every
-        attention path (same contract as bucket padding)."""
+        attention path (same contract as bucket padding). Quantized
+        pools dequantize here — the request cache a prefix hit seeds
+        holds exactly the round-tripped values a cold prefill writes, so
+        hot and cold runs stay token-identical."""
+        kp = pool["k_pages"]
         L, _, ps, N, hd = kp.shape
 
-        def to_cache(pool):
-            g = pool[:, idx].reshape(L, self.pages_per_slot * ps, N, hd)
+        def to_cache(codes, scale):
+            g = codes[:, idx]                       # [L, nP, ps, N, hd]
+            if scale is not None:
+                g = g.astype(jnp.float32) * scale[:, idx][:, :, None, :, None]
+            g = g.reshape(L, self.pages_per_slot * ps, N, hd)
             return g[:, None, :self.max_len]
 
-        return {"k": to_cache(kp), "v": to_cache(vp)}
+        if self.quantized:
+            # prefix pages are live (never freed-poisoned) and hold no
+            # rejected-write sentinels (verify rewrites staged positions
+            # before a page can enter the prefix cache), so the plain
+            # codes * scale dequant is exact here
+            return {"k": to_cache(kp, pool["k_scale"]),
+                    "v": to_cache(pool["v_pages"], pool["v_scale"])}
+        return {"k": to_cache(kp, None), "v": to_cache(pool["v_pages"], None)}
 
     def gather_prefix(self, pages: List[int]) -> Dict[str, jnp.ndarray]:
         """Build a request cache seeded with the shared prefix pages —
         the cache the suffix-only chunked prefill then appends to."""
         idx = np.zeros(self.pages_per_slot, np.int32)
         idx[:len(pages)] = pages
-        return self._gather_jit(self.cache["k_pages"], self.cache["v_pages"],
-                                jnp.asarray(idx))
+        return self._gather_jit(self.cache, jnp.asarray(idx))
 
     # ------------------------------------------------------------ metrics
     def _page_bytes(self) -> int:
@@ -449,6 +560,12 @@ class PagedKVCache(_DonatableCache):
         """Bytes resident for `pages` allocated pages (default: current)."""
         n = self.pages_in_use if pages is None else pages
         return n * self._page_bytes()
+
+    def bytes_per_token(self) -> float:
+        """Resident pool bytes per cached token, over every pool leaf
+        (codes + per-page scales + any scout copies) — the
+        dtype-sensitive footprint the serving summary reports."""
+        return self._page_bytes() / self.page_size
 
     def pool_bytes(self) -> int:
         return cache_bytes(self.cache)

@@ -170,11 +170,29 @@ def test_poisoned_free_pages_never_read_with_donation():
     free = list(eng2.pages._free)
     assert free, "test needs unallocated pages"
     c = eng2.pages.cache
-    eng2.pages.cache = {
-        **c,
-        "k_pages": c["k_pages"].at[:, jnp.asarray(free)].set(jnp.nan),
-        "v_pages": c["v_pages"].at[:, jnp.asarray(free)].set(jnp.nan),
-    }
+    idx = jnp.asarray(free)
+    if c["k_pages"].dtype == jnp.int8:
+        # quantized pool: poison through both sentinel channels — the
+        # -128 code (position-granular) AND NaN page scales (K and V
+        # alike; these pages are never gathered, so even the V-poison
+        # the live paths must avoid is safe here)
+        from repro.core.quant import POISON_CODE
+        vp = c["v_pages"]
+        v_bad = (vp.at[:, idx].set(POISON_CODE) if vp.dtype == jnp.int8
+                 else vp.at[:, idx].set(jnp.nan))
+        eng2.pages.cache = {
+            **c,
+            "k_pages": c["k_pages"].at[:, idx].set(POISON_CODE),
+            "v_pages": v_bad,
+            "k_scale": c["k_scale"].at[:, idx].set(jnp.nan),
+            "v_scale": c["v_scale"].at[:, idx].set(jnp.nan),
+        }
+    else:
+        eng2.pages.cache = {
+            **c,
+            "k_pages": c["k_pages"].at[:, idx].set(jnp.nan),
+            "v_pages": c["v_pages"].at[:, idx].set(jnp.nan),
+        }
     res = eng2.run()
     poisoned = {u: r.tokens for u, r in res.items()}
     assert poisoned == clean, "NaN leaked from never-referenced pool pages"

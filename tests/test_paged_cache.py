@@ -112,7 +112,9 @@ def test_paged_decode_equals_dense_decode(mode):
     cfg = _qwen(enabled=False) if mode == "hdp_off" else \
         _qwen() if mode == "hdp_stock" else _qwen(calib="none")
     prompts = _prompts(4, seed=3)
-    eng, paged = _serve(cfg, None, prompts)
+    # cross-layout identity needs the fp32 pool: the default int8 store
+    # round-trips K/V at prefill time, which the dense cache never does
+    eng, paged = _serve(cfg, None, prompts, attn=AttnSpec(kv_dtype="fp32"))
     if mode == "hdp_stock":
         assert eng.cfg.hdp.calib == "none", "paged engine must pin calib"
         cfg = _qwen(calib="none")

@@ -122,8 +122,12 @@ def test_prefix_hit_matches_cold_and_dense():
     a cold paged engine and to the dense-layout engine."""
     cfg = _qwen()
     prompts = _shared_prompts()
-    e1, cold = _serve(cfg, None, prompts, prefix=False)
-    e2, hot = _serve(cfg, e1.params, prompts, prefix=True)
+    # the dense comparison needs the fp32 pool (dense caches never
+    # round-trip K/V through the int8 store); the hit-vs-cold identity
+    # under the default int8 pool is pinned in test_kv_quant.py
+    fp32 = AttnSpec(kv_dtype="fp32")
+    e1, cold = _serve(cfg, None, prompts, prefix=False, attn=fp32)
+    e2, hot = _serve(cfg, e1.params, prompts, prefix=True, attn=fp32)
     _, dense = _serve(cfg, e1.params, prompts, prefix=None, layout="dense")
     assert hot == cold, f"hit tokens diverged: {hot} != {cold}"
     assert dense == cold
@@ -343,21 +347,23 @@ def test_pool_exhaustion_still_raises_when_nothing_evictable():
 
 # ------------------------------------------------------------- poison / free
 def test_nan_poison_on_last_unref_only():
+    # poison_view() is the dtype-independent face of the poison channel:
+    # NaN K for the fp32 pool, NaN page scale for the quantized default
     cfg = _qwen()
     pool = PagedKVCache(cfg, batch=2, max_len=8, poison_freed=True)
     pages = pool.alloc(0, 6)              # 3 pages, refcount 1 each
-    finite = jnp.ones_like(pool.cache["k_pages"][:, jnp.asarray(pages)])
+    idx = jnp.asarray(pages)
+    finite = jnp.ones_like(pool.cache["k_pages"][:, idx])
     pool.cache = {**pool.cache, "k_pages": pool.cache["k_pages"]
-                  .at[:, jnp.asarray(pages)].set(finite)}
+                  .at[:, idx].set(finite)}
     pool.allocator.ref([pages[0]])        # pages[0] shared by a 2nd owner
     pool.free(0)
-    k = np.asarray(pool.cache["k_pages"])
-    assert np.isfinite(k[:, pages[0]]).all(), \
+    poisoned = np.asarray(pool.poison_view())
+    assert not poisoned[:, pages[0]].any(), \
         "shared page poisoned before its last unref"
-    assert np.isnan(k[:, pages[1]]).all() and np.isnan(k[:, pages[2]]).all()
+    assert poisoned[:, pages[1]].all() and poisoned[:, pages[2]].all()
     pool.allocator.unref([pages[0]])      # last owner gone -> poison
-    k = np.asarray(pool.cache["k_pages"])
-    assert np.isnan(k[:, pages[0]]).all()
+    assert np.asarray(pool.poison_view())[:, pages[0]].all()
 
 
 # ------------------------------------------------- batched prefill donation
