@@ -7,11 +7,13 @@
 Compares the ``current`` row block of a freshly produced
 BENCH_serving.json against the ``current`` block of the *committed* copy
 (saved aside before the bench run overwrites the file), row-matched by
-(bench, arch, hdp, backend, decode_horizon, attn_policy, kv_dtype) —
-the policy component keeps serving_autotune's static-vs-cost legs from
-colliding with rows of the other serving benches, and the kv_dtype
-component keeps serving_kvquant's int8-vs-fp32 legs apart (rows from
-before the quantized pool normalize to "fp32"). The gate trips when the
+(bench, arch, hdp, backend, decode_horizon, attn_policy, kv_dtype,
+tp, dp) — the policy component keeps serving_autotune's static-vs-cost
+legs from colliding with rows of the other serving benches, the
+kv_dtype component keeps serving_kvquant's int8-vs-fp32 legs apart
+(rows from before the quantized pool normalize to "fp32"), and the
+tp/dp components keep serving_tp's mesh legs apart (pre-mesh rows
+normalize to tp=1, dp=1). The gate trips when the
 MEAN decode_tok_s ratio across comparable rows drops below
 ``1 - max_regress`` — per-row wall-clock on shared CI runners is too
 noisy to gate on individually, but a >20% mean collapse across every
@@ -43,13 +45,16 @@ def _load_rows(path: str):
 
 def _key(row: dict):
     # rows recorded before the autotune subsystem carry no attn_policy
-    # (they all ran static selection) and rows recorded before the
+    # (they all ran static selection), rows recorded before the
     # quantized KV pool carry no kv_dtype (they all served the fp32
-    # pool); normalizing both keeps old baselines comparable
+    # pool), and rows recorded before mesh-sharded serving carry no
+    # tp/dp (they all served one unsharded engine); normalizing all
+    # three keeps old baselines comparable
     return (row.get("bench"), row.get("arch"), row.get("hdp"),
             row.get("backend"), row.get("decode_horizon"),
             row.get("attn_policy") or "static",
-            row.get("kv_dtype") or "fp32")
+            row.get("kv_dtype") or "fp32",
+            row.get("tp") or 1, row.get("dp") or 1)
 
 
 def main(argv=None) -> int:

@@ -18,6 +18,7 @@
 | serving_stream | stream scheduler vs static/solo|
 | serving_autotune | cost policy vs static A/B + crossover sweep |
 | serving_kvquant | int8/fp8_v KV pool vs fp32 oracle A/B |
+| serving_tp     | tensor-parallel TP=1/2/4 sharded-pool A/B |
 
 Accuracy is proxied by top-1 next-token agreement vs the dense model on
 held-out synthetic data (no GLUE checkpoints offline — substitution
@@ -488,6 +489,83 @@ def bench_serving_kvquant(quick: bool = False, backend: str = "auto"):
     return rows
 
 
+def bench_serving_tp(quick: bool = False, backend: str = "auto"):
+    """Tensor-parallel serving A/B: TP=1 vs 2 vs 4 over the sharded pool.
+
+    The workload is the stream arch with MHA head counts that divide by
+    4 (olmoe-1b-7b reduced: 4 KV heads), served through otherwise
+    identical paged engines at ``--tp 1/2/4``. Mesh legs beyond the
+    available device count are skipped with a loud note (CPU hosts need
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 exported BEFORE
+    the process starts — jax fixes the device count at backend init).
+    Asserts the acceptance contract per sharded leg vs TP=1:
+
+    * byte-identical generated tokens (``tokens_fp``) — the decode
+      all-gather concatenates exact per-shard head outputs, it never
+      float-reduces, so TP is a pure layout transform;
+    * per-shard resident pool bytes == total pool bytes / TP (the pool
+      is sharded along kv-heads, never replicated);
+    * decode step time within a generous noise margin of the TP=1 leg
+      (host-CPU meshes simulate devices on shared cores, so the gate
+      only catches collapses, not the real-accelerator scaling claim).
+    """
+    import jax
+
+    from repro.launch import serve
+
+    ndev = len(jax.devices())
+    arch = "olmoe-1b-7b"   # reduced: MHA, 4 kv heads -> tp in {1, 2, 4}
+    degrees = [tp for tp in (1, 2, 4) if tp <= ndev]
+    if len(degrees) < 3:
+        print(f"!! serving_tp: only {ndev} jax device(s) visible; running "
+              f"tp={degrees} and skipping the rest (export XLA_FLAGS="
+              f"--xla_force_host_platform_device_count=4 for the full A/B)")
+    rows, legs = [], {}
+    for tp in degrees:
+        args = serve.build_parser().parse_args(
+            ["--arch", arch, "--requests", "4" if quick else "8",
+             "--max-new", "8" if quick else "24",
+             "--layout", "paged", "--backend", backend,
+             "--tp", str(tp), "--warmup"])
+        out = serve.run(args)
+        row = {"arch": arch, "hdp": True, **out}
+        row["backend"] = f"tp{tp}"         # the A/B independent variable
+        rows.append(row)
+        legs[tp] = row
+    base = legs[1]
+    for tp in degrees[1:]:
+        r = legs[tp]
+        assert r["tokens_fp"] == base["tokens_fp"], \
+            f"{arch}: tp={tp} changed the generated tokens"
+        assert r["cache_bytes_pool_per_shard"] * tp \
+            == r["cache_bytes_pool"], \
+            (f"{arch}: tp={tp} per-shard pool "
+             f"{r['cache_bytes_pool_per_shard']}B x{tp} != total "
+             f"{r['cache_bytes_pool']}B — pool not evenly sharded")
+        if r.get("meas_decode_step_s") and base.get("meas_decode_step_s"):
+            # host-CPU meshes time-slice the simulated devices onto the
+            # same cores, so sharded steps measure slower, not faster —
+            # the gate is a collapse-catcher (shard_map retrace loops,
+            # accidental full-pool gathers), not a scaling assertion
+            assert r["meas_decode_step_s"] \
+                <= base["meas_decode_step_s"] * 5.0, \
+                (f"{arch}: tp={tp} decode step "
+                 f"{r['meas_decode_step_s']}s collapsed vs tp=1 "
+                 f"{base['meas_decode_step_s']}s (>5x)")
+        print(f"## {arch} tp={tp}: {r['decode_tok_s']} tok/s vs tp=1 "
+              f"{base['decode_tok_s']}, per-shard pool "
+              f"{r['cache_bytes_pool_per_shard']}B = "
+              f"{r['cache_bytes_pool']}B / {tp}, mesh {r.get('mesh')}, "
+              f"tokens byte-identical")
+    print("# serving tensor-parallel A/B (sharded page pool, head-axis "
+          "shard_map decode)")
+    hdr = [h for h in rows[0] if h != "requests"]
+    print(",".join(str(h) for h in hdr))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in hdr))
+    return rows
+
+
 BENCHES = {}
 
 
@@ -510,13 +588,14 @@ def _register():
         "serving_stream": bench_serving_stream,
         "serving_autotune": bench_serving_autotune,
         "serving_kvquant": bench_serving_kvquant,
+        "serving_tp": bench_serving_tp,
     })
 
 
 #: benches that accept an attention-backend selection (--backend)
 _BACKEND_AWARE = ("serving", "serving_paged", "serving_prefix",
                   "serving_spec", "serving_stream", "serving_autotune",
-                  "serving_kvquant")
+                  "serving_kvquant", "serving_tp")
 
 
 def write_bench_json(path: str, results: dict, *, quick: bool,

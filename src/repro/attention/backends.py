@@ -98,7 +98,8 @@ def _run_paged(q, call, *, q_pos, k_pos, cache, page_table, stage3):
         return_stats=call.needs_stats, stage3=stage3,
         draft=call.draft, per_query=call.verify,
         fk_pool=cache.get("f_scout"),
-        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"))
+        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
+        kv_scale=getattr(call, "kv_scale", "grid"))
     return out, normalize_stats(st)
 
 

@@ -227,8 +227,14 @@ def attention(q, k, v, call: AttnCall, *, spec: Optional[AttnSpec] = None,
         # shapes/dtypes are static under tracing, so the signature (and
         # hence the choice) is burnt into the compiled program
         from repro.autotune.cost import call_signature
+        from repro.distribution.tp import active_tp
+
+        # under tensor-parallel serving this runs inside shard_map, so
+        # q/cache shapes are already per-shard (local heads); the tp
+        # degree keys the signature so cached probe results never cross
+        # mesh shapes, and funds the collective term in the cost model
         sig = call_signature(call, q, k=k, cache=cache,
-                             page_table=page_table)
+                             page_table=page_table, tp=active_tp())
     backend = resolve_backend(call, eff_spec, sig=sig)
     return backend.run(q, k, v, call, q_pos=q_pos, k_pos=k_pos,
                        cache=cache, page_table=page_table)

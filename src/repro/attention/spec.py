@@ -31,6 +31,7 @@ CACHE_LAYOUTS = ("auto", "dense", "paged")
 DRAFT_SCORES = ("scout", "int", "approx")
 POLICIES = ("auto", "static", "cost")
 KV_DTYPES = ("auto", "fp32", "int8", "fp8_v")
+KV_SCALES = ("grid", "absmax")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +110,9 @@ class AttnCall:
         overlaid thresholds; this selects the draft score source), or
         None for a full-fidelity call. Only meaningful with HDP active —
         without a scout there is no approximate path to draft with.
+      kv_scale: scale grid of the quantized pool — "grid" (static
+        power-of-two step) or "absmax" (per-page calibrated scales; the
+        stage-3 dequant must then read the pool's scale arrays).
       verify: multi-query decode (Sq > 1 query rows over one cache, the
         speculative verify shape). HDP backends must then run the scout
         *per query row* — each row's keep mask / head gate must equal
@@ -129,10 +133,14 @@ class AttnCall:
     needs_stats: bool = False
     draft: Optional[DraftProfile] = None
     verify: bool = False
+    kv_scale: str = "grid"
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.kv_scale not in KV_SCALES:
+            raise ValueError(
+                f"kv_scale must be one of {KV_SCALES}, got {self.kv_scale!r}")
         if self.layout not in LAYOUTS:
             raise ValueError(
                 f"layout must be one of {LAYOUTS}, got {self.layout!r}")
@@ -170,6 +178,12 @@ class AttnSpec:
         pool grid at *prefill* write time (so prefix hits, COW tails and
         chunked prefill stay token-identical to cold runs); dense-layout
         engines always serve fp32.
+      kv_scale: scale calibration of the quantized pool — "grid" (the
+        default static power-of-two step; bit-parity guarantees hold) or
+        "absmax" (opt-in per-page calibrated absmax scales: lower
+        round-trip error, but prefill values are no longer snapped to a
+        known grid, so hot/cold bit parity is forfeited and the fp32
+        A/B drift gate is the accuracy contract instead).
       allow_fallback: when the requested backend does not support a call,
         fall down the auto chain instead of raising.
       policy: how "auto" picks among supporting candidates —
@@ -188,6 +202,7 @@ class AttnSpec:
     decode: Optional[str] = None
     layout: str = "auto"
     kv_dtype: str = "auto"
+    kv_scale: str = "grid"
     allow_fallback: bool = True
     policy: str = "auto"
 
@@ -198,6 +213,9 @@ class AttnSpec:
         if self.kv_dtype not in KV_DTYPES:
             raise ValueError(
                 f"kv_dtype must be one of {KV_DTYPES}, got {self.kv_dtype!r}")
+        if self.kv_scale not in KV_SCALES:
+            raise ValueError(
+                f"kv_scale must be one of {KV_SCALES}, got {self.kv_scale!r}")
         if self.policy not in POLICIES:
             raise ValueError(
                 f"policy must be one of {POLICIES}, got {self.policy!r}")

@@ -82,6 +82,7 @@ class CallSig:
     causal: bool = True
     window: int = 0
     per_slot: bool = False
+    tp: int = 1             # tensor-parallel degree (shapes are per-shard)
 
     @property
     def heads(self) -> int:
@@ -94,14 +95,20 @@ class CallSig:
                 f":ps{self.page_size}:dt{self.q_itemsize}.{self.kv_itemsize}"
                 f":hdp{int(self.hdp)}:bq{self.block_q}:bk{self.block_k}"
                 f":dr{self.draft or '-'}:v{int(self.verify)}"
-                f":c{int(self.causal)}:w{self.window}:s{int(self.per_slot)}")
+                f":c{int(self.causal)}:w{self.window}:s{int(self.per_slot)}"
+                f":tp{self.tp}")
 
 
-def call_signature(call, q, k=None, cache=None, page_table=None) -> CallSig:
+def call_signature(call, q, k=None, cache=None, page_table=None,
+                   tp: int = 1) -> CallSig:
     """Build the CallSig for a live dispatch (trace-safe: shapes/dtypes).
 
     ``q`` is the [B,N,G,Sq,hd] query; paged calls derive the KV extent
-    from the page pool + table, dense calls from ``k``.
+    from the page pool + table, dense calls from ``k``. Under
+    tensor-parallel serving the dispatch runs inside shard_map, so the
+    shapes (and hence every byte/FLOP term) are already per-shard —
+    ``tp`` records the mesh degree so probe caches never mix mesh
+    shapes and the predictor can price the output all-gather.
     """
     B, N, G, Sq, hd = q.shape
     if call.layout == "paged":
@@ -122,7 +129,7 @@ def call_signature(call, q, k=None, cache=None, page_table=None) -> CallSig:
         block_k=hdp.block_k if hdp is not None else 0,
         draft=call.draft.scores if call.draft is not None else "",
         verify=call.verify, causal=call.causal, window=call.window,
-        per_slot=call.per_slot)
+        per_slot=call.per_slot, tp=max(int(tp), 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,6 +227,15 @@ def predict(backend: str, sig: CallSig, hw: HardwareProfile,
     else:
         # unknown backend: dense-equivalent with a hefty uncertainty tax
         f, by, ov = dot + softmax, q_io + kv_full, ov * 4.0
+
+    if sig.tp > 1:
+        # tensor-parallel serving: each shard all-gathers the other
+        # shards' per-head output slices before the o-projection. The
+        # sig's shapes are per-shard, so H is the LOCAL head count; the
+        # gathered traffic is the (tp-1) remote slices of the global
+        # [B, H*tp, Sq, hd] output
+        by = by + 2.0 * B * (H * sig.tp) * Sq * hd * sig.q_itemsize \
+            * (sig.tp - 1) / sig.tp
 
     return CostEstimate(flops=f, hbm_bytes=by, overhead_s=ov,
                         interpreted=(backend in _PALLAS

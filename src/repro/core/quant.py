@@ -139,6 +139,30 @@ def roundtrip_pool(x: jnp.ndarray, int_bits: int = 4) -> jnp.ndarray:
     return jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127) * s
 
 
+def absmax_page_scale(x: jnp.ndarray, int_bits: int = 4) -> jnp.ndarray:
+    """Per-page per-kv-head calibrated absmax scale.
+
+    ``x`` is a page-shaped slab [..., ps, N, hd]; the scale spans the
+    page's positions and head dim per KV head: s = max|x| / 127, so the
+    largest value in the page maps to code +/-127 (full int8 range
+    instead of the static grid's fixed step). All-zero pages fall back
+    to the static grid step ``pool_scale(int_bits)`` so a fresh page
+    keeps a finite, nonzero scale (NaN scales are the freed-page poison
+    channel and must never arise from encoding). Returns [..., N]."""
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-3, -1))
+    s0 = jnp.asarray(pool_scale(int_bits), jnp.float32)
+    return jnp.where(m > 0, m / 127.0, s0)
+
+
+def encode_pool_scaled(x: jnp.ndarray, scale) -> jnp.ndarray:
+    """Float values -> int8 pool codes under an explicit (per-page)
+    scale, broadcastable against ``x``. Codes clamp to [-127, 127];
+    -128 stays reserved for poison, exactly as on the static grid."""
+    s = jnp.asarray(scale, jnp.float32)
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / s),
+                    -127, 127).astype(jnp.int8)
+
+
 def scout_int_codes(x: jnp.ndarray, int_bits: int = 4,
                     frac_bits: int = 12) -> jnp.ndarray:
     """int8 integer-scout codes of K (trunc of the fixed-point grid) —

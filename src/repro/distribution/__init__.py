@@ -7,8 +7,18 @@ from repro.distribution.sharding import (
     tree_specs,
     zero1_spec,
 )
+from repro.distribution.tp import (
+    active_serving_mesh,
+    active_tp,
+    pool_pspec,
+    pool_shardings,
+    serving_mesh,
+    tp_paged_attention,
+)
 
 __all__ = [
     "RULES_TP", "RULES_FSDP_TP", "logical_axis_rules", "shard_activation",
     "spec_for", "tree_specs", "zero1_spec",
+    "active_serving_mesh", "active_tp", "pool_pspec", "pool_shardings",
+    "serving_mesh", "tp_paged_attention",
 ]

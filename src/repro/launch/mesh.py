@@ -28,6 +28,30 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes, devices=devs[:need])
 
 
+def make_serving_mesh(tp: int = 1, dp: int = 1,
+                      devices=None) -> jax.sharding.Mesh:
+    """Small serving mesh: (data=dp, model=tp) over whatever devices exist.
+
+    Unlike `make_production_mesh` this builds from the devices actually
+    present (host-CPU friendly: set
+    XLA_FLAGS=--xla_force_host_platform_device_count=N before first jax
+    init to fake N devices). `tp` shards KV-head/pool state, `dp` is the
+    engine-replica axis.
+    """
+    tp, dp = int(tp), int(dp)
+    if tp < 1 or dp < 1:
+        raise ValueError(f"make_serving_mesh: tp={tp} dp={dp} must be >= 1")
+    devs = list(jax.devices()) if devices is None else list(devices)
+    need = tp * dp
+    if len(devs) < need:
+        raise RuntimeError(
+            f"serving mesh (dp={dp}, tp={tp}) needs {need} devices, have "
+            f"{len(devs)} — on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            "before any jax import")
+    return jax.make_mesh((dp, tp), ("data", "model"), devices=devs[:need])
+
+
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests, examples)."""
     n = len(jax.devices())

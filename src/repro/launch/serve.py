@@ -16,6 +16,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import logging
+import os
 import sys
 
 import numpy as np
@@ -23,7 +24,8 @@ import numpy as np
 from repro.attention import AttnSpec, spec_from_legacy
 from repro.configs import get_config
 from repro.configs.base import reduced
-from repro.serving import Engine, Request, SchedulerConfig
+from repro.serving import Engine, ReplicaSet, Request, SchedulerConfig
+from repro.serving.engine import MESH_DP_ENV
 
 log = logging.getLogger("repro.serve")
 
@@ -62,6 +64,26 @@ def build_parser() -> argparse.ArgumentParser:
                          "int8 K + fp8 V, fp32 = the full-precision A/B "
                          "oracle. auto honors REPRO_KV_DTYPE, else int8; "
                          "dense layout always serves fp32")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="tensor-parallel degree: shard the paged KV pool "
+                         "and the decode attention over a jax mesh's "
+                         "'model' (head) axis; token-identical to tp=1. "
+                         "Needs >= tp devices (on CPU: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N). "
+                         "Default honors REPRO_MESH_TP, else 1")
+    ap.add_argument("--dp", type=int, default=None,
+                    help="data-parallel engine replicas behind one "
+                         "dispatching front-end (prefix-affinity then "
+                         "least-loaded); replicas share one params tree so "
+                         "tokens are dispatch-invariant. Default honors "
+                         "REPRO_MESH_DP, else 1")
+    ap.add_argument("--kv-scale", default="grid",
+                    choices=["grid", "absmax"],
+                    help="int8 KV pool scale calibration: grid = one static "
+                         "power-of-two scale (bit-parity with the scout "
+                         "grid); absmax = per-page per-kv-head calibrated "
+                         "scales (lower round-trip error, drift-gated "
+                         "rather than bit-exact vs the scout)")
     ap.add_argument("--calib", default=None,
                     help="override hdp calibration (the paged scout stores "
                          "a write-time int8 copy, i.e. calib-free)")
@@ -170,7 +192,8 @@ def run(args) -> dict:
     policy = getattr(args, "policy", None)
     spec = AttnSpec(backend=args.backend, layout=args.layout,
                     policy=policy if policy is not None else "auto",
-                    kv_dtype=getattr(args, "kv_dtype", "auto"))
+                    kv_dtype=getattr(args, "kv_dtype", "auto"),
+                    kv_scale=getattr(args, "kv_scale", "grid"))
     if args.attn_backend is not None or args.cache_backend is not None:
         # one-release deprecation shim for the old string flags
         spec = spec_from_legacy(args.attn_backend, args.cache_backend,
@@ -185,23 +208,37 @@ def run(args) -> dict:
         prefill_chunk_tokens=getattr(args, "prefill_chunk", None),
         watchdog_steps=getattr(args, "watchdog_steps", 500)) \
         if stream else None
-    eng = Engine(cfg, max_batch=args.max_batch, max_len=args.max_len,
-                 prefill_buckets=(16, 32, 64),
-                 collect_stats=not args.no_hdp, attn=spec,
-                 prefix_cache=args.prefix_cache,
-                 decode_horizon=args.decode_horizon,
-                 spec_decode=args.spec_decode,
-                 draft_len=args.draft_len,
-                 adaptive_spec=getattr(args, "adaptive_spec", None),
-                 tuner=tuner,
-                 stream_sched=stream, sched=sched_cfg)
+    dp = getattr(args, "dp", None)
+    if dp is None:
+        dp = int(os.environ.get(MESH_DP_ENV) or 1)
+    dp = max(int(dp), 1)
+    engine_kw = dict(max_batch=args.max_batch, max_len=args.max_len,
+                     prefill_buckets=(16, 32, 64),
+                     collect_stats=not args.no_hdp, attn=spec,
+                     prefix_cache=args.prefix_cache,
+                     decode_horizon=args.decode_horizon,
+                     spec_decode=args.spec_decode,
+                     draft_len=args.draft_len,
+                     adaptive_spec=getattr(args, "adaptive_spec", None),
+                     tuner=tuner,
+                     stream_sched=stream, sched=sched_cfg,
+                     tp=getattr(args, "tp", None))
+    if dp > 1:
+        eng = ReplicaSet.build(cfg, dp, **engine_kw)
+        engines = eng.engines
+    else:
+        eng = Engine(cfg, **engine_kw)
+        engines = [eng]
+    eng0 = engines[0]
     if getattr(args, "warmup", False):
-        # one throwaway request compiles the prefill/decode jits (same
-        # max_new as the real batch, so every fused-loop scan length the
-        # drain will need is warm), then the counters restart from zero
-        eng.submit(Request(-1, [1, 2, 3, 4], max_new_tokens=args.max_new))
-        eng.run()
-        eng._results.pop(-1, None)
+        # one throwaway request PER REPLICA compiles the prefill/decode
+        # jits (same max_new as the real batch, so every fused-loop scan
+        # length the drain will need is warm), then the counters restart
+        # from zero
+        for e in engines:
+            e.submit(Request(-1, [1, 2, 3, 4], max_new_tokens=args.max_new))
+            e.run()
+            e._results.pop(-1, None)
         eng.reset_metrics()
     if args.shared_prefix \
             and args.max_len - args.max_new - args.shared_prefix < 5:
@@ -220,7 +257,7 @@ def run(args) -> dict:
                        + rng.integers(1, cfg.vocab_size, size=plen).tolist())
 
     arrival_rate = getattr(args, "arrival_rate", 0.0) or 0.0
-    if arrival_rate > 0 and eng.sched is None:
+    if arrival_rate > 0 and eng0.sched is None:
         raise SystemExit("--arrival-rate needs --stream-sched")
     if arrival_rate > 0:
         # Poisson arrivals in engine-step time, drawn AFTER the prompts
@@ -244,7 +281,23 @@ def run(args) -> dict:
         for uid, prompt in enumerate(prompts):
             eng.submit(Request(uid, prompt, max_new_tokens=args.max_new))
         results = eng.run()
-    s = eng.summary()
+    if dp > 1:
+        # replica-0 summary carries the shape/backends; throughput and
+        # counter fields are re-aggregated over the fleet
+        fleet = eng.summary()
+        subs = fleet["replicas"]
+        s = dict(subs[0])
+        for k in ("tokens_out", "decode_s", "prefill_s", "prefill_calls",
+                  "prefill_tokens", "decode_steps", "cache_bytes"):
+            s[k] = sum(sub.get(k, 0) for sub in subs)
+        if s.get("decode_s"):
+            s["decode_tok_s"] = s["tokens_out"] / s["decode_s"]
+        for k in ("block_sparsity", "head_sparsity", "page_sparsity"):
+            vals = [sub.get(k, 0.0) for sub in subs]
+            s[k] = sum(vals) / len(vals)
+        s["requests_per_replica"] = fleet["requests_per_replica"]
+    else:
+        s = eng.summary()
     done = sum(len(r.tokens) == args.max_new for r in results.values())
     # order-independent fingerprint of every generated token — the A/B's
     # byte-identity check (prefix-cache hit vs cold must agree exactly)
@@ -258,7 +311,7 @@ def run(args) -> dict:
         # attributable ground truth for benchmark A/B rows
         "attn_prefill": s["attn_backend_prefill"],
         "attn_decode": s["attn_backend_decode"],
-        "decode_horizon": eng.horizon,
+        "decode_horizon": eng0.horizon,
         "decode_tok_s": round(s.get("decode_tok_s", 0.0), 2),
         "prefill_s_total": round(s["prefill_s"], 3),
         "prefill_calls": s["prefill_calls"],
@@ -270,12 +323,21 @@ def run(args) -> dict:
         "head_sparsity": round(s["head_sparsity"], 4),
         "page_sparsity": round(s["page_sparsity"], 4),
         "kv_dtype": s["kv_dtype"],
+        "kv_scale": s.get("kv_scale", "grid"),
         "cache_bytes": s["cache_bytes"],
         "tokens_fp": tokens_fp,
         "spec_decode": s["spec_decode"],
         "stream_sched": s["stream_sched"],
         "attn_policy": s["attn_policy"],
+        "tp": int(s.get("tp", 1)),
+        "dp": dp,
     }
+    if "mesh_shape" in s:
+        out["mesh"] = s["mesh_shape"]
+        out["cache_bytes_pool_per_shard"] = s["cache_bytes_pool_per_shard"]
+        out["collective_bytes_per_layer"] = s["collective_bytes_per_layer"]
+    if dp > 1:
+        out["requests_per_replica"] = s["requests_per_replica"]
     if "meas_decode_step_s" in s:
         out["meas_decode_step_s"] = round(s["meas_decode_step_s"], 6)
     if s["attn_policy"] == "cost":
@@ -285,8 +347,8 @@ def run(args) -> dict:
                    tuner_cached=int(s.get("tuner_cached", 0)))
         if "pred_decode_step_s" in s:
             out["pred_decode_step_s"] = round(s["pred_decode_step_s"], 6)
-        if tuner_cache and eng.tuner is not None:
-            eng.tuner.save(tuner_cache)   # warm-start the next run
+        if tuner_cache and eng0.tuner is not None:
+            eng0.tuner.save(tuner_cache)   # warm-start the next run
     if s["stream_sched"]:
         out.update(
             sched_admitted=int(s["sched_admitted"]),

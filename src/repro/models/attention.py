@@ -26,10 +26,10 @@ from repro.core import blocking
 from repro.core.config import HDPConfig
 from repro.core.hdp import calibrated_split, decode_scout
 from repro.core.quant import (FRAC_SCOUT_SCALE, POISON_CODE, encode_pool,
-                              pool_int_bits, pool_scale, pool_view_finite,
-                              quantize_and_split, quantize_fixed,
-                              roundtrip_pool, scout_frac_codes,
-                              scout_int_codes)
+                              encode_pool_scaled, pool_int_bits, pool_scale,
+                              pool_view_finite, quantize_and_split,
+                              quantize_fixed, roundtrip_pool,
+                              scout_frac_codes, scout_int_codes)
 from repro.distribution.sharding import shard_activation as shd
 from repro.models import layers as L
 
@@ -579,7 +579,8 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
                                return_stats: bool = False,
                                stage3: str = "xla", page_chunk: int = 128,
                                draft=None, per_query: bool = False,
-                               fk_pool=None, k_scale=None, v_scale=None):
+                               fk_pool=None, k_scale=None, v_scale=None,
+                               kv_scale: str = "grid"):
     """HDP decode over a block-paged KV cache — the FUM dataflow in XLA.
 
     q [B,N,G,Sq,hd]; k/v_pool [P,ps,N,hd] page pools (page 0 is the
@@ -617,6 +618,15 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
     * ``"pallas_block"`` — the block-sparse kernel on a densified gather
       (the pre-kernel route, kept for the conformance matrix).
 
+    ``kv_scale="absmax"`` (quantized pools only) reads per-page
+    *calibrated* scales instead of assuming the static power-of-two
+    grid: stage 1 dequantizes the scout stream through a sanitized copy
+    of ``k_scale`` (NaN freed-page poison -> the static step, poison
+    codes -> 0, so the scout stays finite exactly as on the static
+    grid), and the stage-3 consumers already dequantize through the
+    gathered scales. The FUM kernel derives its scout from the static
+    grid, so ``stage3="pallas_paged"`` falls back to "xla" here.
+
     ``per_query`` runs the scout per query row (the multi-query verify
     shape: each of the Sq rows computes the keep mask / head gate its own
     single-token step would); ``draft`` (a DraftProfile — thresholds
@@ -631,9 +641,21 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
     Sk = nP * ps
     scale = 1.0 / (hd ** 0.5)
     quantized = k_pool.dtype == jnp.int8
+    absmax = quantized and kv_scale == "absmax"
 
     # ---- stage 1: integer scout on the always-streamed int8 copy ----
-    if quantized:
+    if absmax:
+        # calibrated scales: dequantize the scout stream through a
+        # sanitized scale copy — poison codes -> 0 and NaN freed-page
+        # scales -> the static step, preserving the scout-always-finite
+        # contract of the static-grid view
+        codes = k_pool[table]                            # [B,nP,ps,N,hd]
+        ksc = k_scale[table]                             # [B,nP,N]
+        ksc = jnp.where(jnp.isfinite(ksc), ksc, pool_scale(hdp.int_bits))
+        cf = jnp.where(codes == POISON_CODE, 0, codes).astype(F32)
+        k_fin = (cf * ksc[:, :, None, :, None]).reshape(B, Sk, N, hd)
+        ik = jnp.trunc(k_fin)
+    elif quantized:
         # the pool's codes ARE the scout stream: the finite static-grid
         # view (poison sentinels -> 0, masked anyway) truncates to the
         # same integer parts the fp32 pools' write-time copy stored
@@ -666,6 +688,11 @@ def hdp_paged_decode_attention(q, k_pool, v_pool, ik_pool, table, *,
         # the densifying block kernel's reshapes are Sq-unaware; fall
         # back like the windowed case instead of crashing a direct
         # conformance call (registry dispatch never routes verify here)
+        stage3 = "xla"
+    if stage3 == "pallas_paged" and absmax:
+        # the FUM kernel derives its in-register scout from the STATIC
+        # grid; under calibrated scales that scout would disagree with
+        # the one above — fall back rather than fork the keep mask
         stage3 = "xla"
     if draft is not None and draft.scores != "approx":
         # draft stage 3: scores from the int8 scout copies — s_int alone
@@ -786,7 +813,8 @@ def build_attn_call(cfg, *, mode: str, paged: bool = False,
                     per_slot: bool = False, self_aligned: bool = False,
                     cross: bool = False, causal: bool = True,
                     collect_stats: bool = False, draft=None,
-                    verify: bool = False) -> AttnCall:
+                    verify: bool = False,
+                    kv_scale: str = "grid") -> AttnCall:
     """Construct the AttnCall `attn_apply` dispatches on.
 
     One place derives the static call descriptor from the model config and
@@ -821,6 +849,7 @@ def build_attn_call(cfg, *, mode: str, paged: bool = False,
         needs_stats=collect_stats,
         draft=draft if use_hdp else None,
         verify=verify and mode == "decode",
+        kv_scale=kv_scale if paged else "grid",
     )
 
 
@@ -889,6 +918,7 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
             k = L.apply_rope(k, positions, cfg.rope_theta)
 
         if (attn is not None and attn.kv_dtype in ("int8", "fp8_v")
+                and getattr(attn, "kv_scale", "grid") != "absmax"
                 and mode == "prefill" and enc_out is None
                 and cache is not None and "k_pages" not in cache):
             # quantized-pool engine prefilling its dense REQUEST cache:
@@ -897,7 +927,11 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
             # (exact encode of these values), prefix-cache gathers and
             # COW tails all see one set of values — hot and cold runs
             # stay token-identical, and only the fp32-vs-int8 A/B sees
-            # quantization drift
+            # quantization drift. Calibrated (absmax) pools skip this:
+            # their per-page scales depend on the values actually
+            # inserted, so no write-time snap can anticipate them —
+            # hot/cold bit parity is forfeited by that mode's contract
+            # and the fp32 drift gate bounds the error instead
             ib = pool_int_bits(cfg.hdp)
             k = roundtrip_pool(k, ib).astype(k.dtype)
             if attn.kv_dtype == "fp8_v":
@@ -918,7 +952,24 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
                                        write_floor)
             off = positions % ps
             pool_q = cache["k_pages"].dtype == jnp.int8
-            if pool_q:
+            kv_scale = getattr(attn, "kv_scale", "grid") if attn else "grid"
+            if pool_q and kv_scale == "absmax":
+                # calibrated pool: encode against the destination page's
+                # CURRENT scale (set by the prefill insert; fresh decode
+                # pages keep the static step), sanitizing NaN freed-page
+                # poison back to the static step so the encode is finite
+                ib = pool_int_bits(cfg.hdp)
+                s0 = pool_scale(ib)
+                ks = cache["k_scale"][pidx]                    # [B,S,N]
+                ks = jnp.where(jnp.isfinite(ks), ks, s0)[..., None]
+                k_store = encode_pool_scaled(k, ks)
+                if cache["v_pages"].dtype != jnp.int8:
+                    v_store = v.astype(cache["v_pages"].dtype)
+                else:
+                    vs = cache["v_scale"][pidx]
+                    vs = jnp.where(jnp.isfinite(vs), vs, s0)[..., None]
+                    v_store = encode_pool_scaled(v, vs)
+            elif pool_q:
                 ib = pool_int_bits(cfg.hdp)
                 k_store = encode_pool(k, ib)
                 v_store = (v.astype(cache["v_pages"].dtype)
@@ -1000,10 +1051,24 @@ def attn_apply(cfg, p, x, *, mode: str, positions, cache=None,
         self_aligned=(cache is None and not is_cross and positions.ndim == 1),
         cross=is_cross, causal=causal, collect_stats=collect_stats,
         draft=draft if mode == "decode" else None,
-        verify=mode == "decode" and S > 1 and not is_cross)
-    o, stats = attention(
-        qg, k_full, v_full, call, spec=attn, q_pos=q_pos, k_pos=k_pos,
-        cache=new_cache if paged else None, page_table=page_table)
+        verify=mode == "decode" and S > 1 and not is_cross,
+        kv_scale=getattr(attn, "kv_scale", "grid") if attn else "grid")
+    mesh = None
+    if paged:
+        from repro.distribution.tp import active_serving_mesh
+        mesh = active_serving_mesh()
+    if mesh is not None:
+        # tensor-parallel serving: run the paged-decode dispatch head-
+        # sharded under the ambient mesh (per-shard scout + fetched set;
+        # one exact all-gather of o before the projection below)
+        from repro.distribution.tp import tp_paged_attention
+        o, stats = tp_paged_attention(
+            qg, call, attn, q_pos=q_pos, k_pos=k_pos, cache=new_cache,
+            page_table=page_table, mesh=mesh)
+    else:
+        o, stats = attention(
+            qg, k_full, v_full, call, spec=attn, q_pos=q_pos, k_pos=k_pos,
+            cache=new_cache if paged else None, page_table=page_table)
 
     o = o.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
     y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])

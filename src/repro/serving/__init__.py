@@ -2,5 +2,6 @@ from repro.serving.allocator import (PageAllocator, PoolExhausted,  # noqa: F401
                                      RadixPrefixCache)
 from repro.serving.engine import Engine, Request, Result  # noqa: F401
 from repro.serving.kv_cache import PagedKVCache, SlotCache  # noqa: F401
+from repro.serving.replica import ReplicaSet  # noqa: F401
 from repro.serving.scheduler import (SchedulerConfig, StreamScheduler,  # noqa: F401
                                      WatchdogError)

@@ -153,6 +153,16 @@ ADAPTIVE_ENV = "REPRO_ADAPTIVE_SPEC"
 #: A/B oracle). Dense layouts always serve fp32.
 KV_DTYPE_ENV = "REPRO_KV_DTYPE"
 
+#: env var giving the default tensor-parallel degree when ``tp=None`` and
+#: no mesh is passed (explicit kwargs win; the env default degrades
+#: silently — to 1 — for layouts/head-counts/device-counts that cannot
+#: shard, so a CI matrix can run the whole suite under it).
+MESH_TP_ENV = "REPRO_MESH_TP"
+
+#: env var giving the default engine-replica count for launch/serve.py's
+#: ``--dp`` flag (the Engine itself is one replica; see serving/replica.py).
+MESH_DP_ENV = "REPRO_MESH_DP"
+
 
 @dataclasses.dataclass
 class Request:
@@ -286,7 +296,9 @@ class Engine:
                  adaptive_spec: Optional[bool] = None,
                  tuner=None,
                  stream_sched: Optional[bool] = None,
-                 sched: Optional[SchedulerConfig] = None):
+                 sched: Optional[SchedulerConfig] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 tp: Optional[int] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "enc-dec serving uses launch/serve.py --arch whisper path")
@@ -398,6 +410,46 @@ class Engine:
             raise ValueError(f"decode_horizon must be >= 1, got {decode_horizon}")
         self.horizon = int(decode_horizon)
 
+        # ---- serving mesh (tensor-parallel paged attention) ----
+        if spec.kv_scale == "absmax" and kv_dtype == "fp32":
+            raise ValueError(
+                "kv_scale='absmax' calibrates a quantized pool's scales; "
+                "it needs kv_dtype='int8'/'fp8_v' and the paged layout")
+        self.kv_scale = spec.kv_scale if layout == "paged" else "grid"
+        if mesh is not None:
+            mesh_tp = int(dict(mesh.shape).get("model", 1))
+            if tp is not None and int(tp) != mesh_tp:
+                raise ValueError(
+                    f"tp={tp} disagrees with the mesh's model axis "
+                    f"({mesh_tp})")
+            tp = mesh_tp
+        if tp is None:
+            env = os.environ.get(MESH_TP_ENV, "")
+            try:
+                tp = int(env) if env else 1
+            except ValueError:
+                raise ValueError(f"{MESH_TP_ENV}={env!r}: not an int")
+            # env default degrades silently, like the other REPRO_* envs,
+            # so a CI leg can run every engine under it
+            if (layout != "paged" or tp < 1 or cfg.n_kv_heads % max(tp, 1)
+                    or len(jax.devices()) < tp):
+                tp = 1
+        tp = int(tp)
+        if tp > 1:
+            if layout != "paged":
+                raise ValueError(
+                    "tp > 1 shards the paged page pool along the head "
+                    "axis; dense-layout families cannot serve sharded")
+            if cfg.n_kv_heads % tp != 0:
+                raise ValueError(
+                    f"n_kv_heads={cfg.n_kv_heads} not divisible by tp={tp}")
+            if mesh is None:
+                from repro.launch.mesh import make_serving_mesh
+                mesh = make_serving_mesh(tp=tp)
+            self.mesh, self.tp = mesh, tp
+        else:
+            self.mesh, self.tp = None, 1
+
         if params is None:
             rng = rng if rng is not None else jax.random.PRNGKey(0)
             params, _ = registry.init_params(cfg, rng)
@@ -412,7 +464,7 @@ class Engine:
                 # *fp32* pool speculates with scout-copy scores (quantized
                 # pools derive both scout views from the codes for free)
                 draft_scout=self.spec and self.draft_profile.scores == "scout",
-                kv_dtype=kv_dtype)
+                kv_dtype=kv_dtype, kv_scale=self.kv_scale, mesh=self.mesh)
         else:
             # speculative rounds stage writes up to draft_len - 1 positions
             # past the commit frontier before rolling back; the dense slot
@@ -476,6 +528,15 @@ class Engine:
             self._spec_round_paged_fn if self.paged
             else self._spec_round_dense_fn,
             static_argnums=(0, 1, 2), donate_argnums=(5,))
+
+    # ------------------------------------------------------------ serving mesh
+    def _mesh_ctx(self):
+        """Ambient-mesh context every jitted step runs under: at trace
+        time the model layer consults it to route paged-decode attention
+        through the head-sharded shard_map wrapper (a no-op context when
+        the engine is unsharded)."""
+        from repro.distribution.tp import serving_mesh
+        return serving_mesh(self.mesh)
 
     # ------------------------------------------------------------ prefix cache
     def _build_prefix_cache(self, requested) -> Optional[RadixPrefixCache]:
@@ -979,9 +1040,10 @@ class Engine:
         t0 = time.perf_counter()
         cache = store.take()                       # donated to the jit below
         try:
-            new_cache, stats = self._prefill_jit(
-                self.params, jnp.asarray(toks), bucket, self._attn_epoch,
-                cache, scatter)
+            with self._mesh_ctx():
+                new_cache, stats = self._prefill_jit(
+                    self.params, jnp.asarray(toks), bucket, self._attn_epoch,
+                    cache, scatter)
         except BaseException:
             store.restore_if_undonated(cache)
             for slot in slots:                     # roll admission back
@@ -1019,9 +1081,10 @@ class Engine:
         clen = chunk if rem >= chunk else self._tail_len(rem, off)
         piece = np.full((1, clen), prompt[plen - 1], np.int32)
         piece[0, :min(rem, clen)] = prompt[off:off + clen]
-        cache, stats = self._chunk_jit(
-            self.params, jnp.asarray(piece), self._attn_epoch, cache,
-            jnp.asarray(off, I32))
+        with self._mesh_ctx():
+            cache, stats = self._chunk_jit(
+                self.params, jnp.asarray(piece), self._attn_epoch, cache,
+                jnp.asarray(off, I32))
         self._record_stats(stats)
         self.metrics["prefill_tokens"] += clen
         return cache, off + clen
@@ -1365,10 +1428,13 @@ class Engine:
         cache = store.take()                       # donated to the jit below
         try:
             if self.paged:
-                ys, tok, new_cache, pos, active, remaining = self._decode_jit(
-                    length, self._attn_epoch, self.params, self._last_tok,
-                    cache, self.pages.table(), self._floor_dev, self._pos,
-                    self._active_dev, self._remaining_dev, self._eos_dev)
+                with self._mesh_ctx():
+                    ys, tok, new_cache, pos, active, remaining = \
+                        self._decode_jit(
+                            length, self._attn_epoch, self.params,
+                            self._last_tok, cache, self.pages.table(),
+                            self._floor_dev, self._pos, self._active_dev,
+                            self._remaining_dev, self._eos_dev)
             else:
                 ys, tok, new_cache, pos, active, remaining = self._decode_jit(
                     length, self._attn_epoch, self.params, self._last_tok,
@@ -1446,11 +1512,13 @@ class Engine:
         cache = store.take()                       # donated to the jit below
         try:
             if self.paged:
-                ys, tok, new_cache, pos, active, remaining = self._spec_jit(
-                    k, profile, self._attn_epoch, self.params,
-                    self._last_tok, cache, self.pages.table(),
-                    self._floor_dev, self._pos, self._active_dev,
-                    self._remaining_dev, self._eos_dev)
+                with self._mesh_ctx():
+                    ys, tok, new_cache, pos, active, remaining = \
+                        self._spec_jit(
+                            k, profile, self._attn_epoch, self.params,
+                            self._last_tok, cache, self.pages.table(),
+                            self._floor_dev, self._pos, self._active_dev,
+                            self._remaining_dev, self._eos_dev)
             else:
                 ys, tok, new_cache, pos, active, remaining = self._spec_jit(
                     k, profile, self._attn_epoch, self.params,
@@ -1704,6 +1772,18 @@ class Engine:
             m["cache_bytes"] = self.pages.active_bytes(self.pages.peak_pages)
             m["cache_bytes_pool"] = self.pages.pool_bytes()
             m["kv_dtype"] = self.kv_dtype
+            m["kv_scale"] = self.kv_scale
+            m["tp"] = self.tp
+            if self.mesh is not None:
+                m["mesh_shape"] = dict(self.mesh.shape)
+                m["cache_bytes_pool_per_shard"] = \
+                    self.pages.pool_bytes_per_shard()
+                # per decode step, per layer: each shard all-gathers the
+                # other shards' per-head output slices before the
+                # o-projection (the only cross-shard traffic)
+                m["collective_bytes_per_layer"] = int(
+                    self.max_batch * self.cfg.n_heads * self.cfg.hd * 4
+                    * (self.tp - 1) / self.tp)
             m["cache_bytes_per_token"] = self.pages.bytes_per_token()
             m["pages_peak"] = self.pages.peak_pages
             m["pages_in_use"] = self.pages.pages_in_use

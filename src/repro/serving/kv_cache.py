@@ -23,14 +23,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quant import (POISON_CODE, encode_pool, pool_int_bits,
-                              pool_scale)
+from repro.core.quant import (POISON_CODE, absmax_page_scale, encode_pool,
+                              encode_pool_scaled, pool_int_bits, pool_scale)
 from repro.models import registry
 from repro.serving.allocator import PageAllocator
 
 #: storage formats of the paged pool: int8 codes + per-page scale (the
 #: production default), int8 K + fp8 V, or the fp32 A/B oracle.
 KV_DTYPES = ("fp32", "int8", "fp8_v")
+
+#: scale calibration of a quantized pool: the static power-of-two grid
+#: (bit-parity guarantees) or opt-in per-page calibrated absmax scales.
+KV_SCALES = ("grid", "absmax")
 
 
 class DonatedCacheError(RuntimeError):
@@ -261,12 +265,22 @@ class PagedKVCache(_DonatableCache):
                  num_pages: Optional[int] = None,
                  poison_freed: bool = False,
                  draft_scout: bool = False,
-                 kv_dtype: str = "int8"):
+                 kv_dtype: str = "int8",
+                 kv_scale: str = "grid",
+                 mesh: Optional[jax.sharding.Mesh] = None):
         hdp = cfg.hdp
         if kv_dtype not in KV_DTYPES:
             raise ValueError(
                 f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}")
+        if kv_scale not in KV_SCALES:
+            raise ValueError(
+                f"kv_scale must be one of {KV_SCALES}, got {kv_scale!r}")
+        if kv_scale == "absmax" and kv_dtype == "fp32":
+            raise ValueError(
+                "kv_scale='absmax' calibrates a quantized pool's scales; "
+                "fp32 pools have none (use kv_dtype='int8'/'fp8_v')")
         self.kv_dtype = kv_dtype
+        self.kv_scale = kv_scale
         self.quantized = kv_dtype != "fp32"
         self.scout = hdp is not None and hdp.enabled
         #: fp32 pools also store the int8 quantized-fraction copy of K at
@@ -322,6 +336,18 @@ class PagedKVCache(_DonatableCache):
                 self.cache["k_scout"] = jnp.zeros(shape, jnp.int8)
             if self.draft_scout:
                 self.cache["f_scout"] = jnp.zeros(shape, jnp.int8)
+        self.mesh = mesh
+        self.tp = 1
+        if mesh is not None:
+            from repro.distribution.tp import pool_shardings
+            self.tp = int(dict(mesh.shape).get("model", 1))
+            if N % self.tp != 0:
+                raise ValueError(
+                    f"n_kv_heads={N} not divisible by tp={self.tp}")
+            # resident pool lives head-sharded: each model shard holds
+            # 1/tp of every page's codes, scales and scout views
+            self.cache = jax.device_put(
+                self.cache, pool_shardings(mesh, self.cache))
         self.allocator = PageAllocator(self.num_pages, reserved=1,
                                        on_free=self._on_free)
         self._slot_pages: Dict[int, List[int]] = {}
@@ -461,17 +487,31 @@ class PagedKVCache(_DonatableCache):
         flat = idx[:npg].astype(jnp.int32)
         if self.quantized:
             s0 = pool_scale(self.int_bits)
-            vq = vp.astype(pool["v_pages"].dtype) \
-                if self.kv_dtype == "fp8_v" else encode_pool(vp, self.int_bits)
+            if self.kv_scale == "absmax":
+                # per-page calibrated scales: s = max|x|/127 over the
+                # page's positions and head dim, per kv head (all-zero
+                # pages fall back to the static step — finite, nonzero)
+                ks = absmax_page_scale(kp, self.int_bits)    # [L, npg, N]
+                kq = encode_pool_scaled(kp, ks[:, :, None, :, None])
+            else:
+                ks = jnp.full(kp.shape[:2] + kp.shape[3:4], s0, jnp.float32)
+                kq = encode_pool(kp, self.int_bits)
+            if self.kv_dtype == "fp8_v":
+                vq = vp.astype(pool["v_pages"].dtype)
+                vs = jnp.ones_like(ks)
+            elif self.kv_scale == "absmax":
+                vs = absmax_page_scale(vp, self.int_bits)
+                vq = encode_pool_scaled(vp, vs[:, :, None, :, None])
+            else:
+                vs = jnp.full_like(ks, s0)
+                vq = encode_pool(vp, self.int_bits)
             # scales are (re)written with the codes, so a reused page
             # sheds any freed-poison sentinel the moment it holds data
             return {
-                "k_pages": pool["k_pages"].at[:, flat].set(
-                    encode_pool(kp, self.int_bits)),
+                "k_pages": pool["k_pages"].at[:, flat].set(kq),
                 "v_pages": pool["v_pages"].at[:, flat].set(vq),
-                "k_scale": pool["k_scale"].at[:, flat].set(s0),
-                "v_scale": pool["v_scale"].at[:, flat].set(
-                    1.0 if self.kv_dtype == "fp8_v" else s0),
+                "k_scale": pool["k_scale"].at[:, flat].set(ks),
+                "v_scale": pool["v_scale"].at[:, flat].set(vs),
             }
         new = {
             "k_pages": pool["k_pages"].at[:, flat].set(
@@ -569,6 +609,12 @@ class PagedKVCache(_DonatableCache):
 
     def pool_bytes(self) -> int:
         return cache_bytes(self.cache)
+
+    def pool_bytes_per_shard(self) -> int:
+        """Resident pool bytes held by ONE model shard: every pool leaf
+        (codes, scales, scout views) is head-sharded, so each of the tp
+        shards holds exactly 1/tp of the pool."""
+        return self.pool_bytes() // self.tp
 
 
 def kv_read_bytes_per_step(cfg, seq_len: int, batch: int,

@@ -1,0 +1,169 @@
+"""Data-parallel engine replicas behind one dispatching front-end.
+
+Above tensor parallelism (which shards ONE engine's page pool across a
+mesh's "model" axis — see ``distribution.tp``) sits the replica layer:
+N complete engines, each with its own page pool, slot state, scheduler
+and prefix cache, served through a single submit/step/serve surface.
+Replicas share one params tree, so which replica serves a request never
+changes its tokens — dispatch is a pure load/locality decision:
+
+* **prefix affinity** first: the replica whose radix prefix cache holds
+  the longest cached prefix of the prompt (a read-only ``peek``) wins —
+  re-dispatching a shared-prefix request to the replica that already
+  holds the pages turns a cold prefill into a hot one;
+* **least-loaded** otherwise: the replica with the fewest pending
+  requests (active + queued + scheduler backlog), ties broken by
+  replica index for determinism.
+
+``serve`` merges the per-replica completion streams by driving every
+replica with pending work one step per iteration and yielding Results
+in global finish order.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.serving.engine import Engine, Request, Result
+
+
+class ReplicaSet:
+    """N engines, one front-end. See module docstring for dispatch."""
+
+    def __init__(self, engines: Sequence[Engine]):
+        if not engines:
+            raise ValueError("ReplicaSet needs at least one engine")
+        self.engines: List[Engine] = list(engines)
+        self._home: Dict[int, Engine] = {}      # uid -> serving replica
+        self._finish_log: List[int] = []        # uids in global finish order
+        self._emitted_per_eng = [0] * len(self.engines)
+
+    @classmethod
+    def build(cls, cfg, dp: int, *, params=None, rng=None,
+              **engine_kw) -> "ReplicaSet":
+        """Build ``dp`` replicas sharing ONE params tree.
+
+        The first engine initializes (or adopts) the params; the rest
+        reuse the same tree, so every replica is token-identical by
+        construction. Per-engine kwargs (tp, attn, spec_decode, ...)
+        apply to every replica alike.
+        """
+        if dp < 1:
+            raise ValueError(f"dp must be >= 1, got {dp}")
+        first = Engine(cfg, params=params, rng=rng, **engine_kw)
+        rest = [Engine(cfg, params=first.params, **engine_kw)
+                for _ in range(dp - 1)]
+        return cls([first] + rest)
+
+    # -------------------------------------------------------------- dispatch
+    def _pick(self, req: Request) -> Engine:
+        best, best_hit = None, 0
+        for eng in self.engines:
+            if eng.prefix is None:
+                continue
+            hit = eng.prefix.peek(req.prompt, align=eng._page_align)
+            if hit > best_hit:
+                best, best_hit = eng, hit
+        if best is not None:
+            return best
+        return min(self.engines, key=lambda e: (e._n_pending(),
+                                                self.engines.index(e)))
+
+    def submit(self, req: Request) -> Engine:
+        """Dispatch ``req`` to a replica (returned for introspection)."""
+        eng = self._pick(req)
+        self._home[req.uid] = eng
+        eng.submit(req)
+        return eng
+
+    # ----------------------------------------------------------------- drive
+    def _n_pending(self) -> int:
+        return sum(e._n_pending() for e in self.engines)
+
+    def _drain_finished(self) -> List[int]:
+        """Collect uids finished since the last drain, in finish order
+        (per replica; interleaved round-robin across replicas)."""
+        fresh: List[int] = []
+        for i, eng in enumerate(self.engines):
+            while self._emitted_per_eng[i] < len(eng._finished):
+                fresh.append(eng._finished[self._emitted_per_eng[i]])
+                self._emitted_per_eng[i] += 1
+        self._finish_log.extend(fresh)
+        return fresh
+
+    def step(self) -> int:
+        """One step of every replica with pending work; returns how many
+        replicas stepped."""
+        ran = 0
+        for eng in self.engines:
+            if eng._n_pending():
+                eng.step()
+                ran += 1
+        return ran
+
+    def run(self, max_steps: int = 10_000, *,
+            strict: bool = False) -> Dict[int, Result]:
+        """Drive every replica until all submitted requests complete."""
+        steps = 0
+        while self._n_pending() and steps < max_steps:
+            self.step()
+            steps += 1
+        self._drain_finished()
+        out: Dict[int, Result] = {}
+        for eng in self.engines:
+            if steps >= max_steps and eng._n_pending():
+                out.update(eng.run(max_steps=0, strict=strict))
+            else:
+                out.update(eng.results())
+        return out
+
+    def serve(self, reqs: Optional[Iterable[Request]] = None, *,
+              max_steps: int = 10_000):
+        """Merged streaming serve loop: yields each Result as it
+        completes, across every replica; more requests may be submitted
+        between yields."""
+        if reqs is not None:
+            for r in reqs:
+                self.submit(r)
+        self._drain_finished()      # don't re-yield pre-loop results
+        steps = 0
+        while self._n_pending():
+            if steps >= max_steps:
+                raise RuntimeError(
+                    f"ReplicaSet.serve: step budget {max_steps} exhausted "
+                    f"with {self._n_pending()} request(s) unfinished")
+            self.step()
+            steps += 1
+            for uid in self._drain_finished():
+                yield self._home[uid]._results[uid]
+
+    # ------------------------------------------------------------- reporting
+    def results(self) -> Dict[int, Result]:
+        out: Dict[int, Result] = {}
+        for eng in self.engines:
+            out.update(eng.results())
+        return out
+
+    def reset_metrics(self) -> None:
+        for eng in self.engines:
+            eng.reset_metrics()
+
+    def summary(self) -> Dict[str, object]:
+        """Merged summary: fleet totals plus the per-replica summaries."""
+        subs = [e.summary() for e in self.engines]
+        m: Dict[str, object] = {
+            "dp": len(self.engines),
+            "tp": self.engines[0].tp,
+            "tokens_out": sum(s.get("tokens_out", 0) for s in subs),
+            "decode_s": sum(s.get("decode_s", 0.0) for s in subs),
+            "prefill_s": sum(s.get("prefill_s", 0.0) for s in subs),
+            "requests_per_replica": [
+                len(e._results) for e in self.engines],
+            "replicas": subs,
+        }
+        if m["decode_s"]:
+            m["decode_tok_s"] = m["tokens_out"] / m["decode_s"]
+        for key in ("mesh_shape", "cache_bytes_pool_per_shard",
+                    "collective_bytes_per_layer", "kv_dtype", "kv_scale"):
+            if key in subs[0]:
+                m[key] = subs[0][key]
+        return m

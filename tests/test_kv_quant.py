@@ -337,6 +337,132 @@ def test_probe_flip_retraces_prefill_jits_once(monkeypatch):
     assert eng._chunk_jit._cache_size() == 2 * n_chunk
 
 
+# --------------------------------------------------- absmax calibration
+def test_absmax_roundtrip_beats_grid():
+    """Per-page absmax calibration: on small-magnitude pages the static
+    power-of-two grid wastes most of its code range; the calibrated
+    scale round-trips within its own half step and far below the grid's
+    error."""
+    from repro.core.quant import absmax_page_scale, encode_pool_scaled
+
+    rng = np.random.default_rng(17)
+    ib = 4
+    s0 = pool_scale(ib)
+    x = jnp.asarray(rng.normal(0, 0.05, size=(6, 4, 2, 8))
+                    .astype(np.float32))
+    ks = absmax_page_scale(x, ib)                       # [P, N]
+    assert ks.shape == (6, 2)
+    codes = encode_pool_scaled(x, ks[:, None, :, None])
+    assert int(codes.min()) >= -127, "calibrated encode emitted POISON_CODE"
+    dq = np.asarray(codes, np.float32) * np.asarray(ks)[:, None, :, None]
+    err_absmax = np.abs(dq - np.asarray(x)).max()
+    assert err_absmax <= float(np.asarray(ks).max()) / 2 * (1 + 1e-6), \
+        "calibrated round-trip exceeded its half-step bound"
+    dq_grid = np.asarray(decode_pool(encode_pool(x, ib), s0))
+    err_grid = np.abs(dq_grid - np.asarray(x)).max()
+    assert err_absmax < err_grid / 4, \
+        (f"absmax error {err_absmax:.5f} not clearly below the static "
+         f"grid's {err_grid:.5f}")
+
+
+def test_absmax_zero_page_falls_back_to_grid_scale():
+    """An all-zero page has no absmax: the scale falls back to the
+    static grid step (finite — a 0 scale would poison the dequant)."""
+    from repro.core.quant import absmax_page_scale
+
+    s = np.asarray(absmax_page_scale(jnp.zeros((2, 4, 2, 8), F32), 4))
+    assert (s == pool_scale(4)).all()
+
+
+def test_absmax_spec_and_defaults():
+    """kv_scale is opt-in: defaults stay on the bit-parity grid, bad
+    values and the fp32+absmax combination are rejected up front."""
+    assert AttnSpec().kv_scale == "grid"
+    assert AttnSpec(kv_dtype="int8").kv_scale == "grid"
+    with pytest.raises(ValueError):
+        AttnSpec(kv_scale="per_tensor")
+    with pytest.raises(ValueError, match="absmax"):
+        Engine(_qwen(), max_batch=1, max_len=32,
+               attn=AttnSpec(kv_dtype="fp32", kv_scale="absmax"))
+
+
+def test_absmax_decode_drift_gate_vs_fp32_oracle():
+    """fp32 A/B drift gate: with pruning off (pure quantization A/B),
+    the absmax pool's decode output drifts from the fp32 oracle by less
+    than the static-grid pool does, and stays within a 10% bound of the
+    oracle's output range."""
+    from repro.core.quant import absmax_page_scale, encode_pool_scaled
+
+    rng = jax.random.PRNGKey(5)
+    B, N, G, hd, ps, nP = 2, 2, 2, 8, 4, 8
+    P = 1 + B * nP
+    Sk = nP * ps
+    hdp = HDPConfig(block_q=1, block_k=ps, rho_b=0.99, causal=True,
+                    head_pruning=False, calib="none")
+    ib = hdp.int_bits
+    # small-magnitude K/V: the regime where calibration matters
+    ks = 0.05 * jax.random.normal(jax.random.fold_in(rng, 1),
+                                  (P, ps, N, hd), F32)
+    vs = 0.05 * jax.random.normal(jax.random.fold_in(rng, 2),
+                                  (P, ps, N, hd), F32)
+    q = jax.random.normal(jax.random.fold_in(rng, 3), (B, N, G, 1, hd), F32)
+    table = jnp.arange(1, P, dtype=jnp.int32).reshape(B, nP)
+    pos = jnp.full((B, 1), Sk - 1, jnp.int32)
+    q_pos = pos[:, None, None, :]
+    ar = jnp.arange(Sk)
+    k_pos = jnp.where(ar[None] <= pos, ar, -1)[:, None, None, :]
+    kw = dict(q_pos=q_pos, k_pos=k_pos, hdp=hdp, stage3="xla",
+              page_chunk=128)
+
+    out_fp, _ = hdp_paged_decode_attention(
+        q, ks, vs, scout_int8(ks, hdp), table, **kw)
+
+    ksc, vsc = absmax_page_scale(ks, ib), absmax_page_scale(vs, ib)
+    out_a, _ = hdp_paged_decode_attention(
+        q, encode_pool_scaled(ks, ksc[:, None, :, None]),
+        encode_pool_scaled(vs, vsc[:, None, :, None]), None, table,
+        k_scale=ksc, v_scale=vsc, kv_scale="absmax", **kw)
+
+    g = jnp.full((P, N), pool_scale(ib), F32)
+    out_g, _ = hdp_paged_decode_attention(
+        q, encode_pool(ks, ib), encode_pool(vs, ib), None, table,
+        k_scale=g, v_scale=g, **kw)
+
+    ref = np.asarray(out_fp)
+    assert np.isfinite(np.asarray(out_a)).all()
+    drift_a = np.abs(np.asarray(out_a) - ref).max()
+    drift_g = np.abs(np.asarray(out_g) - ref).max()
+    assert drift_a < drift_g, \
+        (f"absmax drift {drift_a:.5f} not below the static grid's "
+         f"{drift_g:.5f} vs the fp32 oracle")
+    assert drift_a <= 0.1 * np.abs(ref).max() + 1e-6, \
+        f"absmax drift {drift_a:.5f} breaches the 10% oracle gate"
+
+
+def test_absmax_serving_end_to_end():
+    """The calibrated pool serves: full generations, deterministic under
+    the FIXED format, kv_scale surfaced in the summary. (Byte-identity
+    vs the grid pool is NOT asserted — absmax forfeits the write-time
+    bit-parity by design; the drift gate above is its contract.)"""
+    cfg = _qwen()
+    prompts = _prompts(3, seed=19)
+    a8 = AttnSpec(kv_dtype="int8", kv_scale="absmax")
+
+    def serve(params):
+        eng = Engine(cfg, params=params, max_batch=2, max_len=64,
+                     prefill_buckets=(16, 32), attn=a8)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid, p, max_new_tokens=4))
+        return eng, {u: r.tokens for u, r in eng.run().items()}
+
+    eng, r1 = serve(None)
+    assert all(len(t) == 4 for t in r1.values())
+    assert eng.summary()["kv_scale"] == "absmax"
+    assert eng.summary()["kv_dtype"] == "int8"
+    _, r2 = serve(eng.params)
+    assert r2 == r1, "absmax serving is not deterministic"
+
+
 # ------------------------------------------------------------ kernel route
 @pytest.mark.slow  # interpret-mode kernel per layer per step
 def test_pallas_backend_matches_xla_under_int8():
