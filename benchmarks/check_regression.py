@@ -47,14 +47,18 @@ def _key(row: dict):
     # rows recorded before the autotune subsystem carry no attn_policy
     # (they all ran static selection), rows recorded before the
     # quantized KV pool carry no kv_dtype (they all served the fp32
-    # pool), and rows recorded before mesh-sharded serving carry no
-    # tp/dp (they all served one unsharded engine); normalizing all
-    # three keeps old baselines comparable
+    # pool), rows recorded before mesh-sharded serving carry no tp/dp
+    # (they all served one unsharded engine), and rows recorded before
+    # the fault-injection harness carry no faults field (they all ran
+    # clean); normalizing all of these keeps old baselines comparable
+    # — and keeps a chaos leg from ever being compared against a clean
+    # one, since the fault plan is part of the cell identity
     return (row.get("bench"), row.get("arch"), row.get("hdp"),
             row.get("backend"), row.get("decode_horizon"),
             row.get("attn_policy") or "static",
             row.get("kv_dtype") or "fp32",
-            row.get("tp") or 1, row.get("dp") or 1)
+            row.get("tp") or 1, row.get("dp") or 1,
+            row.get("faults") or "none")
 
 
 def main(argv=None) -> int:

@@ -19,6 +19,7 @@
 | serving_autotune | cost policy vs static A/B + crossover sweep |
 | serving_kvquant | int8/fp8_v KV pool vs fp32 oracle A/B |
 | serving_tp     | tensor-parallel TP=1/2/4 sharded-pool A/B |
+| serving_chaos  | goodput under injected faults vs clean A/B |
 
 Accuracy is proxied by top-1 next-token agreement vs the dense model on
 held-out synthetic data (no GLUE checkpoints offline — substitution
@@ -566,6 +567,80 @@ def bench_serving_tp(quick: bool = False, backend: str = "auto"):
     return rows
 
 
+#: the deterministic chaos plan driven through --fault-plan in the
+#: serving_chaos A/B: a slow step, an injected pool exhaustion (deferred
+#: admission), a per-slot NaN tripwire on uid 1, then replica 0 killed.
+CHAOS_PLAN = "slow@0:s=0.002;exhaust@1;nan@2:uid=1;kill@3:replica=0"
+
+
+def bench_serving_chaos(quick: bool = False, backend: str = "auto"):
+    """Goodput-under-faults A/B: clean fleet vs deterministic chaos.
+
+    The same seeded workload runs twice on a dp=2 stream-scheduled
+    fleet: ``clean`` — no faults; ``chaos`` — ``CHAOS_PLAN`` injected
+    (slow step, pool exhaustion, a NaN-poisoned slot, replica 0 killed
+    mid-run). Goodput is tokens of *ok* requests per decode second.
+    Asserts the fault-tolerance acceptance contract: no request is lost
+    (every uid gets a typed Result — failed over, shed, or errored, but
+    never silently dropped), exactly the NaN-poisoned request fails
+    while its batchmates complete in full, every scheduled fault event
+    fired, and replica 0 is reported dead with its work failed over.
+    """
+    from repro.launch import serve
+
+    rows = []
+    for arch in ("qwen2-1.5b",) if quick else ("qwen2-1.5b", "granite-8b"):
+        base = ["--arch", arch, "--requests", "6" if quick else "10",
+                "--max-new", "4" if quick else "8", "--max-batch", "2",
+                "--backend", backend, "--seed", "3", "--dp", "2",
+                "--stream-sched", "--warmup"]
+        legs = {}
+        for name, extra in (("clean", []),
+                            ("chaos", ["--fault-plan", CHAOS_PLAN])):
+            out = serve.run(serve.build_parser().parse_args(base + extra))
+            row = {"arch": arch, **out}
+            row["backend"] = name          # the A/B independent variable
+            row["faults"] = out.get("fault_plan") or "none"
+            if out.get("decode_tok_s") and out["requests"]:
+                ok_frac = out["requests_ok"] / out["requests"]
+                row["goodput_tok_s"] = round(
+                    out["decode_tok_s"] * ok_frac, 2)
+            rows.append(row)
+            legs[name] = row
+        cl, ch = legs["clean"], legs["chaos"]
+        assert cl["requests_ok"] == cl["requests"] \
+            and cl["requests_lost"] == 0, \
+            f"{arch}: clean leg dropped requests: {cl}"
+        assert ch["requests_lost"] == 0, \
+            (f"{arch}: chaos leg lost {ch['requests_lost']} request(s) — "
+             "failover/shed must always leave a typed Result")
+        assert ch["requests_failed"] == 1 \
+            and ch["requests_ok"] == ch["requests"] - 1, \
+            (f"{arch}: chaos leg expected exactly the NaN-poisoned "
+             f"request to fail: ok={ch['requests_ok']} "
+             f"failed={ch['requests_failed']} of {ch['requests']}")
+        assert ch["faults_fired"] == len(CHAOS_PLAN.split(";")), \
+            (f"{arch}: only {ch['faults_fired']} of the scheduled fault "
+             "events fired — the plan never fully exercised the fleet")
+        assert ch["replica_health"] == ["dead", "up"] \
+            and ch["failovers"] == 1 and ch["requests_failed_over"] > 0, \
+            (f"{arch}: replica-0 kill not reflected: "
+             f"health={ch['replica_health']} failovers={ch['failovers']} "
+             f"failed_over={ch['requests_failed_over']}")
+        print(f"## {arch}: goodput {ch.get('goodput_tok_s')} tok/s under "
+              f"chaos vs {cl.get('goodput_tok_s')} clean, "
+              f"{ch['requests_ok']}/{ch['requests']} ok, "
+              f"{ch['requests_failed_over']} failed over after replica-0 "
+              f"kill, {ch['faults_fired']} fault events fired")
+    print("# serving fault-tolerance A/B (dp=2 stream fleet, "
+          f"plan {CHAOS_PLAN})")
+    hdr = [h for h in rows[0] if h != "requests"]
+    print(",".join(str(h) for h in hdr))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in hdr))
+    return rows
+
+
 BENCHES = {}
 
 
@@ -589,13 +664,14 @@ def _register():
         "serving_autotune": bench_serving_autotune,
         "serving_kvquant": bench_serving_kvquant,
         "serving_tp": bench_serving_tp,
+        "serving_chaos": bench_serving_chaos,
     })
 
 
 #: benches that accept an attention-backend selection (--backend)
 _BACKEND_AWARE = ("serving", "serving_paged", "serving_prefix",
                   "serving_spec", "serving_stream", "serving_autotune",
-                  "serving_kvquant", "serving_tp")
+                  "serving_kvquant", "serving_tp", "serving_chaos")
 
 
 def write_bench_json(path: str, results: dict, *, quick: bool,

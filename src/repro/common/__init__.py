@@ -1,0 +1,5 @@
+"""Cross-cutting helpers shared by training and serving."""
+
+from repro.common.transient import TransientError, is_transient
+
+__all__ = ["TransientError", "is_transient"]

@@ -164,7 +164,17 @@ def build_parser() -> argparse.ArgumentParser:
                          "default = one largest-bucket chunk per step")
     ap.add_argument("--watchdog-steps", type=int, default=500,
                     help="no-progress engine steps with requests pending "
-                         "before the stream scheduler's watchdog raises")
+                         "before the stream scheduler's watchdog sheds the "
+                         "stalled queue head (raises past its escalation "
+                         "threshold)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic fault-injection schedule "
+                         "('kind@step[:k=v,..];...', kinds exhaust | error "
+                         "| nan | slow | kill — see repro.serving.faults). "
+                         "Steps count engine steps; --warmup pauses "
+                         "injection and restarts step numbering afterwards, "
+                         "so fault steps always index the measured traffic. "
+                         "Default honors REPRO_FAULT_PLAN, else no faults")
     ap.add_argument("--warmup", action="store_true",
                     help="run one throwaway request through the engine and "
                          "reset metrics before serving, so reported tok/s "
@@ -223,22 +233,30 @@ def run(args) -> dict:
                      tuner=tuner,
                      stream_sched=stream, sched=sched_cfg,
                      tp=getattr(args, "tp", None))
+    fault_plan = getattr(args, "fault_plan", None)
     if dp > 1:
-        eng = ReplicaSet.build(cfg, dp, **engine_kw)
+        eng = ReplicaSet.build(cfg, dp, faults=fault_plan, **engine_kw)
         engines = eng.engines
     else:
-        eng = Engine(cfg, **engine_kw)
+        eng = Engine(cfg, faults=fault_plan, **engine_kw)
         engines = [eng]
     eng0 = engines[0]
     if getattr(args, "warmup", False):
         # one throwaway request PER REPLICA compiles the prefill/decode
         # jits (same max_new as the real batch, so every fused-loop scan
         # length the drain will need is warm), then the counters restart
-        # from zero
+        # from zero. Fault injection is paused and step numbering restarts
+        # afterwards, so scheduled fault steps index the measured traffic.
+        paused = [e.faults for e in engines]
+        for e in engines:
+            e.faults = None
         for e in engines:
             e.submit(Request(-1, [1, 2, 3, 4], max_new_tokens=args.max_new))
             e.run()
             e._results.pop(-1, None)
+        for e, f in zip(engines, paused):
+            e.faults = f
+            e._cur_step = 0
         eng.reset_metrics()
     if args.shared_prefix \
             and args.max_len - args.max_new - args.shared_prefix < 5:
@@ -288,13 +306,21 @@ def run(args) -> dict:
         subs = fleet["replicas"]
         s = dict(subs[0])
         for k in ("tokens_out", "decode_s", "prefill_s", "prefill_calls",
-                  "prefill_tokens", "decode_steps", "cache_bytes"):
+                  "prefill_tokens", "decode_steps", "cache_bytes",
+                  "req_cancelled", "req_deadline", "req_errors",
+                  "sched_preempted", "watchdog_shed", "faults_injected",
+                  "queue_rejected"):
             s[k] = sum(sub.get(k, 0) for sub in subs)
         if s.get("decode_s"):
             s["decode_tok_s"] = s["tokens_out"] / s["decode_s"]
         for k in ("block_sparsity", "head_sparsity", "page_sparsity"):
             vals = [sub.get(k, 0.0) for sub in subs]
             s[k] = sum(vals) / len(vals)
+        for k in ("health", "failovers", "requests_failed_over",
+                  "replica_queue_depth", "replica_inflight",
+                  "replica_last_step_s", "fault_plan", "faults_fired"):
+            if k in fleet:
+                s[k] = fleet[k]
         s["requests_per_replica"] = fleet["requests_per_replica"]
     else:
         s = eng.summary()
@@ -332,12 +358,34 @@ def run(args) -> dict:
         "tp": int(s.get("tp", 1)),
         "dp": dp,
     }
+    # request-lifecycle accounting: every submitted request must come back
+    # as SOME typed Result even under injected faults — "lost" (no Result
+    # at all) is the failure mode the fault harness exists to catch
+    out["requests_ok"] = sum(r.status == "ok" for r in results.values())
+    out["requests_failed"] = sum(
+        r.status != "ok" for r in results.values())
+    out["requests_lost"] = args.requests - len(results)
+    if "fault_plan" in s:
+        out["fault_plan"] = s["fault_plan"]
+        out["faults_fired"] = int(s["faults_fired"])
+        out["req_cancelled"] = int(s.get("req_cancelled", 0))
+        out["req_deadline"] = int(s.get("req_deadline", 0))
+        out["req_errors"] = int(s.get("req_errors", 0))
+        out["sched_preempted"] = int(s.get("sched_preempted", 0))
+        out["watchdog_shed"] = int(s.get("watchdog_shed", 0))
     if "mesh_shape" in s:
         out["mesh"] = s["mesh_shape"]
         out["cache_bytes_pool_per_shard"] = s["cache_bytes_pool_per_shard"]
         out["collective_bytes_per_layer"] = s["collective_bytes_per_layer"]
     if dp > 1:
         out["requests_per_replica"] = s["requests_per_replica"]
+        out["replica_health"] = s.get("health", [])
+        out["failovers"] = int(s.get("failovers", 0))
+        out["requests_failed_over"] = int(s.get("requests_failed_over", 0))
+        out["replica_queue_depth"] = s.get("replica_queue_depth", [])
+        out["replica_inflight"] = s.get("replica_inflight", [])
+        out["replica_last_step_s"] = [
+            round(float(v), 5) for v in s.get("replica_last_step_s", [])]
     if "meas_decode_step_s" in s:
         out["meas_decode_step_s"] = round(s["meas_decode_step_s"], 6)
     if s["attn_policy"] == "cost":
@@ -398,6 +446,10 @@ def main(argv=None) -> int:
                         format="%(asctime)s %(name)s %(message)s")
     args = build_parser().parse_args(argv)
     out = run(args)
+    if out.get("fault_plan"):
+        # under injected faults some requests fail BY DESIGN — success is
+        # "no request lost": every submission came back as a typed Result
+        return 0 if out["requests_lost"] == 0 else 1
     return 0 if out["completed"] == out["requests"] else 1
 
 

@@ -1,7 +1,10 @@
+from repro.common.transient import TransientError, is_transient  # noqa: F401
 from repro.serving.allocator import (PageAllocator, PoolExhausted,  # noqa: F401
                                      RadixPrefixCache)
 from repro.serving.engine import Engine, Request, Result  # noqa: F401
+from repro.serving.faults import (FAULT_ENV, FaultInjector,  # noqa: F401
+                                  FaultPlan, InjectedFault)
 from repro.serving.kv_cache import PagedKVCache, SlotCache  # noqa: F401
 from repro.serving.replica import ReplicaSet  # noqa: F401
-from repro.serving.scheduler import (SchedulerConfig, StreamScheduler,  # noqa: F401
-                                     WatchdogError)
+from repro.serving.scheduler import (QueueFull, SchedulerConfig,  # noqa: F401
+                                     StreamScheduler, WatchdogError)

@@ -26,14 +26,18 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.common.transient import TransientError
 
-class PoolExhausted(RuntimeError):
+
+class PoolExhausted(TransientError):
     """The page pool cannot satisfy an allocation right now.
 
     A *typed* exhaustion signal so callers can tell recoverable pressure
     (defer the request, evict, retry next tick — what the stream
     scheduler's token-budget admission does) from genuine bugs that also
-    surface as RuntimeError (e.g. a stale donated-cache handle)."""
+    surface as RuntimeError (e.g. a stale donated-cache handle). It is a
+    `TransientError`: retry layers (replica step retries, `fault.retry`)
+    may back off and try again rather than failing over."""
 
 
 class PageAllocator:
@@ -78,6 +82,22 @@ class PageAllocator:
 
     def refcount(self, page: int) -> int:
         return self._refs[page]
+
+    def assert_drained(self) -> None:
+        """Raise AssertionError unless every page is back on the free list.
+
+        The leak oracle for fault-path tests: after cancel/preempt/
+        failover and a full drain, refcounts and pages-in-use must both
+        be zero — any live page here is an unwind path that lost track
+        of an owner.
+        """
+        leaked = [(p, self._refs[p]) for p in range(self.num_pages)
+                  if self._refs[p] != 0]
+        if leaked or self._in_use or len(self._free) != self.capacity:
+            raise AssertionError(
+                f"page pool not drained: in_use={self._in_use}, "
+                f"free={len(self._free)}/{self.capacity}, "
+                f"leaked refcounts={leaked[:16]}")
 
     # ----------------------------------------------------------- lifecycle
     def alloc(self, n: int) -> List[int]:

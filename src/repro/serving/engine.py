@@ -102,7 +102,7 @@ import math
 import os
 import time
 import warnings
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -116,7 +116,9 @@ from repro.models import registry
 from repro.models.attention import build_attn_call
 from repro.serving import kv_cache
 from repro.serving.allocator import PoolExhausted, RadixPrefixCache
-from repro.serving.scheduler import SchedulerConfig, StreamScheduler
+from repro.serving.faults import FaultInjector, FaultPlan, coerce_injector
+from repro.serving.scheduler import (QueueFull, SchedulerConfig,
+                                     StreamScheduler)
 
 I32 = jnp.int32
 
@@ -170,6 +172,27 @@ class Request:
     prompt: Sequence[int]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    #: admission priority ("prefix" order mode): higher admits first, and
+    #: only a strictly-lower-priority running request may be preempted to
+    #: unblock a starved queue head (equal priorities never preempt).
+    priority: int = 0
+    #: wall-clock budget from submit() to completion; on expiry the
+    #: request is cancelled with ``Result(status="deadline")`` wherever
+    #: it is (queued, mid-prefill, or decoding).
+    deadline_s: Optional[float] = None
+    #: wall-clock budget from submit() to slot activation; expires only
+    #: while still waiting (an admitted request is allowed to finish).
+    max_queue_wait_s: Optional[float] = None
+    # --- preempt/failover restore bookkeeping (engine-managed) ---
+    #: tokens already generated before the last preempt/failover; they are
+    #: folded into ``prompt`` for the recompute resume and re-emitted at
+    #: the head of the final ``Result.tokens``.
+    prior_tokens: Tuple[int, ...] = ()
+    #: prompt length of the ORIGINAL submission (``prompt`` grows with
+    #: each restore); None until the first preemption.
+    orig_prompt_len: Optional[int] = None
+    #: times this request was preempted or failed over so far.
+    preemptions: int = 0
 
 
 @dataclasses.dataclass
@@ -180,8 +203,18 @@ class Result:
     prefill_s: float = 0.0
     decode_steps: int = 0
     #: False when Engine.run exhausted its step budget before this request
-    #: finished (tokens then hold the partial generation so far).
+    #: finished (tokens then hold the partial generation so far), and for
+    #: every non-"ok" status.
     complete: bool = True
+    #: "ok" | "cancelled" | "deadline" | "error" — the typed request
+    #: outcome; non-"ok" Results carry whatever tokens were generated
+    #: before the request was unwound.
+    status: str = "ok"
+    #: human-readable failure detail for non-"ok" statuses.
+    error: Optional[str] = None
+    #: times the request was preempted/failed over before finishing
+    #: (its tokens are byte-identical to an uninterrupted run regardless).
+    preemptions: int = 0
     #: seconds from submit() to slot activation (queue + prefill wait);
     #: None for requests served without a submit timestamp.
     queue_wait_s: Optional[float] = None
@@ -277,6 +310,11 @@ class Engine:
         config implies True.
     sched: SchedulerConfig tuning the scheduler (chunk token budget per
         step, admission order, watchdog limits); None uses defaults.
+    faults: deterministic fault injection — a `serving.faults`
+        FaultInjector (share one across a ReplicaSet for fleet-wide
+        once-only events), FaultPlan, or plan spec string. None reads
+        ``REPRO_FAULT_PLAN`` (default: no injection). Step numbers in
+        the plan count this engine's ``step()`` calls from construction.
     """
 
     def __init__(self, cfg: ModelConfig, params=None, *, rng=None,
@@ -298,7 +336,8 @@ class Engine:
                  stream_sched: Optional[bool] = None,
                  sched: Optional[SchedulerConfig] = None,
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 tp: Optional[int] = None):
+                 tp: Optional[int] = None,
+                 faults: Union[FaultInjector, FaultPlan, str, None] = None):
         if cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "enc-dec serving uses launch/serve.py --arch whisper path")
@@ -497,6 +536,20 @@ class Engine:
         #: order log the streaming serve() generator drains
         self._t_submit: Dict[int, float] = {}
         self._finished: List[int] = []
+        #: uid -> (absolute deadline, absolute queue-wait deadline),
+        #: enforced at the top of every step; popped at finish
+        self._deadlines: Dict[int, Tuple[Optional[float],
+                                         Optional[float]]] = {}
+        #: activation sequence counter — the preemption victim tiebreak
+        #: (newest activation preempts first: it has the least sunk work)
+        self._act_seq = 0
+        #: engine step counter driving the fault plan's step schedule
+        self._cur_step = 0
+        self.faults = coerce_injector(faults)
+        #: cached all-false logit-poison mask for fault-free steps (the
+        #: jitted decode/verify always takes the mask so injection never
+        #: changes the compiled program)
+        self._zero_inject = jnp.zeros((max_batch,), bool)
         if stream_sched is None:
             env = os.environ.get(STREAM_ENV, "")
             stream_sched = env.lower() in ("1", "true", "on") if env \
@@ -611,7 +664,8 @@ class Engine:
             attn=self.attn_spec)
         return new_cache, stats
 
-    def _decode_step(self, params, token, cache, pos, table, floors=None):
+    def _decode_step(self, params, token, cache, pos, table, floors=None,
+                     inject=None):
         if table is not None:
             logits, new_cache, stats = registry.apply_decode(
                 self.cfg, params, token, cache, pos[:, None],
@@ -621,19 +675,31 @@ class Engine:
             logits, new_cache, stats = registry.apply_decode(
                 self.cfg, params, token, cache, pos[:, None],
                 collect_stats=self.collect_stats, attn=self.attn_spec)
+        if inject is not None:
+            # fault harness: poison the selected rows' logits so the
+            # tripwire below fires exactly as it would for organic NaNs
+            logits = jnp.where(inject[:, None, None], jnp.nan, logits)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(I32)[:, None]
-        return nxt, new_cache, stats
+        # per-slot tripwire: a non-finite logit row means this request's
+        # state is poisoned (overflow, stale staging read, bad page) —
+        # flag it so the host can abort ONLY that request while the rest
+        # of the batch keeps its token-identical stream
+        bad = ~jnp.isfinite(logits[:, -1]).all(axis=-1)
+        return nxt, bad, new_cache, stats
 
     def _decode_loop(self, length, params, tok, cache, table, floors, pos,
-                     active, remaining, eos):
+                     active, remaining, eos, inject):
         """``length`` fused decode steps as one jitted lax.scan.
 
         On-device bookkeeping mirrors the host loop exactly: a slot is
         done when its budget runs out (``remaining``) or it emits its
         ``eos`` id (-1 = none); done slots park on token 0 / position 0
         with their page-table row zeroed, so their writes land in the
-        scratch page. Emitted per step: (token [B], pre-step active mask
-        [B], stats) — the active mask tells the host which emitted
+        scratch page. A slot whose logits go non-finite (the per-slot
+        tripwire; ``inject`` forces it for the fault harness) parks the
+        same way but is reported faulted instead of emitting its token.
+        Emitted per step: (token [B], pre-step active mask [B], fault
+        mask [B], stats) — the active mask tells the host which emitted
         tokens are real, keeping horizon-H output token-identical to H=1
         even when EOS fires mid-horizon. ``length`` is static (the host
         clamps it to the longest remaining budget, so the scan never
@@ -644,14 +710,16 @@ class Engine:
             tok, cache, pos, active, remaining = carry
             table_eff = (None if table is None
                          else jnp.where(active[:, None], table, 0))
-            nxt, cache2, stats = self._decode_step(
-                params, tok, cache, pos, table_eff, floors)
-            done = active & ((remaining <= 1)
-                             | ((eos >= 0) & (nxt[:, 0] == eos)))
-            carry = (jnp.where(done[:, None], 0, nxt), cache2,
-                     jnp.where(done, 0, pos + 1), active & ~done,
+            nxt, bad, cache2, stats = self._decode_step(
+                params, tok, cache, pos, table_eff, floors, inject)
+            fault = active & bad
+            done = active & ~fault & ((remaining <= 1)
+                                      | ((eos >= 0) & (nxt[:, 0] == eos)))
+            gone = done | fault
+            carry = (jnp.where(gone[:, None], 0, nxt), cache2,
+                     jnp.where(gone, 0, pos + 1), active & ~gone,
                      remaining - active.astype(I32))
-            return carry, (nxt[:, 0], active, stats)
+            return carry, (nxt[:, 0], active, fault, stats)
 
         carry, ys = jax.lax.scan(body, (tok, cache, pos, active, remaining),
                                  None, length=length)
@@ -659,16 +727,16 @@ class Engine:
         return ys, tok, cache, pos, active, remaining
 
     def _decode_loop_paged_fn(self, length, epoch, params, tok, cache, table,
-                              floors, pos, active, remaining, eos):
+                              floors, pos, active, remaining, eos, inject):
         del epoch  # static retrace token only — selection reruns per trace
         return self._decode_loop(length, params, tok, cache, table, floors,
-                                 pos, active, remaining, eos)
+                                 pos, active, remaining, eos, inject)
 
     def _decode_loop_dense_fn(self, length, epoch, params, tok, cache, pos,
-                              active, remaining, eos):
+                              active, remaining, eos, inject):
         del epoch
         return self._decode_loop(length, params, tok, cache, None, None,
-                                 pos, active, remaining, eos)
+                                 pos, active, remaining, eos, inject)
 
     # ------------------------------------------------------ speculative round
     def _draft_step(self, params, token, cache, pos, table, floors,
@@ -684,16 +752,22 @@ class Engine:
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(I32)[:, None]
         return nxt, new_cache
 
-    def _verify_step(self, params, tokens, cache, pos_rows, table, floors):
+    def _verify_step(self, params, tokens, cache, pos_rows, table, floors,
+                     inject=None):
         """One k-wide multi-query verify: all k positions re-scored (and
         their exact K/V re-written, overwriting the draft's staging) in a
-        single batched attention call over the serving cache."""
+        single batched attention call over the serving cache. Rows with
+        any non-finite logit (or forced by ``inject``) are reported
+        faulted — the round commits nothing for them."""
         kw = {"page_table": table, "write_floor": floors} \
             if table is not None else {}
         logits, new_cache, stats = registry.apply_decode(
             self.cfg, params, tokens, cache, pos_rows,
             collect_stats=self.collect_stats, attn=self.attn_spec, **kw)
-        return jnp.argmax(logits, axis=-1).astype(I32), new_cache, stats
+        if inject is not None:
+            logits = jnp.where(inject[:, None, None], jnp.nan, logits)
+        bad = ~jnp.isfinite(logits).all(axis=(1, 2))
+        return jnp.argmax(logits, axis=-1).astype(I32), bad, new_cache, stats
 
     def _poison_rejected(self, cache, table_eff, floors, pos, n_commit,
                          active, k):
@@ -748,7 +822,7 @@ class Engine:
         return {**cache, "k": kc.at[:, b, stale].set(val)}
 
     def _spec_round(self, k, profile, params, tok, cache, table, floors,
-                    pos, active, remaining, eos):
+                    pos, active, remaining, eos, inject):
         """One fused self-speculative round (``k`` = draft_len, static).
 
         Draft: ``k - 1`` sequential decode steps under the draft profile
@@ -763,8 +837,11 @@ class Engine:
         EOS and budget cut commits exactly like the fused horizon loop;
         rejected staged writes past the new frontier are NaN-poisoned.
 
-        Emits (exact tokens [k, B], commit mask [k, B], verify stats) +
-        the updated carry — one host sync per round.
+        Emits (exact tokens [k, B], commit mask [k, B], fault mask [B],
+        verify stats) + the updated carry — one host sync per round. A
+        faulted row (non-finite verify logits, organic or injected)
+        commits nothing, is parked like a done slot, and its staged
+        writes are fully poisoned by the rollback fence (n_commit = 0).
         """
         table_eff = (None if table is None
                      else jnp.where(active[:, None], table, 0))
@@ -786,8 +863,9 @@ class Engine:
         ver_in = jnp.concatenate([tok, drafts], axis=1)     # [B, k]
         steps = jnp.arange(k, dtype=I32)
         ver_pos = pos[:, None] + steps[None]                # [B, k]
-        exact, cache, stats = self._verify_step(
-            params, ver_in, cache, ver_pos, table_eff, floors)
+        exact, bad, cache, stats = self._verify_step(
+            params, ver_in, cache, ver_pos, table_eff, floors, inject)
+        fault = active & bad
 
         # longest accepted prefix: drafts[:, j] proposed the token the
         # verify re-derived as exact[:, j]; the first mismatch still
@@ -799,40 +877,67 @@ class Engine:
         cut = (is_eos & within).astype(I32)
         eos_before = jnp.cumsum(cut, axis=1) - cut          # EOS strictly before
         commit = (within & (eos_before == 0)
-                  & (steps[None] < remaining[:, None]) & active[:, None])
+                  & (steps[None] < remaining[:, None]) & active[:, None]
+                  & ~fault[:, None])
         n_commit = commit.sum(axis=1).astype(I32)
 
         cache = self._poison_rejected(cache, table_eff, floors, pos,
                                       n_commit, active, k)
         eos_hit = (is_eos & commit).any(axis=1)
         remaining = remaining - n_commit
-        done = active & (eos_hit | (remaining <= 0))
-        new_active = active & ~done
+        done = active & ~fault & (eos_hit | (remaining <= 0))
+        new_active = active & ~done & ~fault
         last = jnp.take_along_axis(
             exact, jnp.maximum(n_commit - 1, 0)[:, None], axis=1)
         tok = jnp.where(new_active[:, None], last, 0)
         pos = jnp.where(new_active, pos + n_commit, 0)
-        return ((exact.T, commit.T, stats), tok, cache, pos, new_active,
-                remaining)
+        return ((exact.T, commit.T, fault, stats), tok, cache, pos,
+                new_active, remaining)
 
     def _spec_round_paged_fn(self, k, profile, epoch, params, tok, cache,
-                             table, floors, pos, active, remaining, eos):
+                             table, floors, pos, active, remaining, eos,
+                             inject):
         del epoch  # static retrace token only
         return self._spec_round(k, profile, params, tok, cache, table,
-                                floors, pos, active, remaining, eos)
+                                floors, pos, active, remaining, eos, inject)
 
     def _spec_round_dense_fn(self, k, profile, epoch, params, tok, cache,
-                             pos, active, remaining, eos):
+                             pos, active, remaining, eos, inject):
         del epoch
         return self._spec_round(k, profile, params, tok, cache, None, None,
-                                pos, active, remaining, eos)
+                                pos, active, remaining, eos, inject)
 
     # --------------------------------------------------------------- public
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, *, deadline_s: Optional[float] = None,
+               max_queue_wait_s: Optional[float] = None) -> None:
+        """Enqueue a request.
+
+        ``deadline_s`` / ``max_queue_wait_s`` override the request's own
+        fields (convenience for callers that build Requests elsewhere).
+        Raises `QueueFull` when the stream scheduler's waiting queue is
+        at ``SchedulerConfig.max_queue_depth`` — typed backpressure; the
+        request is NOT enqueued and no Result is recorded for it."""
+        if deadline_s is not None:
+            req = dataclasses.replace(req, deadline_s=deadline_s)
+        if max_queue_wait_s is not None:
+            req = dataclasses.replace(req, max_queue_wait_s=max_queue_wait_s)
         if len(req.prompt) + req.max_new_tokens > self.max_len:
             raise ValueError(
                 f"request {req.uid}: prompt+generation exceeds max_len")
-        self._t_submit[req.uid] = time.perf_counter()
+        if self.sched is not None:
+            depth_max = self.sched.cfg.max_queue_depth
+            if depth_max is not None and self.sched.depth >= depth_max:
+                self.metrics["queue_rejected"] += 1
+                raise QueueFull(
+                    f"request {req.uid}: waiting queue at "
+                    f"max_queue_depth={depth_max}; back off and resubmit")
+        now = time.perf_counter()
+        self._t_submit[req.uid] = now
+        if req.deadline_s is not None or req.max_queue_wait_s is not None:
+            self._deadlines[req.uid] = (
+                now + req.deadline_s if req.deadline_s is not None else None,
+                now + req.max_queue_wait_s
+                if req.max_queue_wait_s is not None else None)
         if self.sched is not None:
             self.sched.enqueue(req)
         else:
@@ -982,6 +1087,11 @@ class Engine:
 
     def _reserve(self, need: int) -> List[int]:
         """Allocate fresh pages, evicting LRU cached prefixes on pressure."""
+        if self.faults is not None \
+                and self.faults.pool_exhausted(self._cur_step):
+            self.metrics["faults_injected"] += 1
+            raise PoolExhausted(
+                f"injected pool exhaustion (engine step {self._cur_step})")
         short = need - self.pages.allocator.available
         if short > 0 and self.prefix is not None:
             self.prefix.evict(short)
@@ -1267,8 +1377,13 @@ class Engine:
         and yields the first generated token — identical for aligned,
         bucket-padded and prefix-shared prompts."""
         plen = len(req.prompt)
-        self._active[slot] = {"req": req, "generated": []}
-        res = Result(req.uid, plen, [], prefill_s=prefill_s)
+        self._active[slot] = {"req": req, "generated": [],
+                              "act_seq": self._act_seq}
+        self._act_seq += 1
+        # prompt_len reports the ORIGINAL submission's prompt (restore
+        # resumes fold generated tokens into req.prompt)
+        res = Result(req.uid, req.orig_prompt_len or plen, [],
+                     prefill_s=prefill_s, preemptions=req.preemptions)
         t_sub = self._t_submit.get(req.uid)
         if t_sub is not None:
             res.queue_wait_s = time.perf_counter() - t_sub
@@ -1295,7 +1410,11 @@ class Engine:
                 "sched_admitted": 0, "sched_recycled": 0,
                 "sched_deferred": 0, "sched_chunk_tokens": 0,
                 "sched_interleaved_steps": 0, "queue_depth_sum": 0,
-                "queue_depth_samples": 0, "queue_depth_peak": 0}
+                "queue_depth_samples": 0, "queue_depth_peak": 0,
+                # fault-tolerance counters
+                "sched_preempted": 0, "watchdog_shed": 0,
+                "queue_rejected": 0, "faults_injected": 0,
+                "req_cancelled": 0, "req_deadline": 0, "req_errors": 0}
 
     def reset_metrics(self) -> None:
         """Zero the aggregated serving metrics (e.g. after a warmup pass,
@@ -1346,21 +1465,35 @@ class Engine:
                 self.tuner.observe_sparsity(b_mean, h_mean, p_mean)
         m["stat_samples"] += 1
 
-    def _finish(self, slot: int, now: Optional[float] = None) -> None:
+    def _finish(self, slot: int, now: Optional[float] = None, *,
+                status: str = "ok", error: Optional[str] = None) -> None:
         st = self._active.pop(slot)
         req = st["req"]
         res = self._results[req.uid]
-        res.tokens = st["generated"]
-        res.decode_steps = len(st["generated"])
-        res.complete = True   # may have been marked incomplete by a prior
-        # budget-exhausted run() whose follow-up call finished the request
+        # tokens generated before a preempt/failover restore come first:
+        # the restore folded them into the prompt, so the concatenation is
+        # byte-identical to an uninterrupted run
+        res.tokens = list(req.prior_tokens) + st["generated"]
+        res.decode_steps = len(res.tokens)
+        res.complete = status == "ok"   # may have been marked incomplete by
+        # a prior budget-exhausted run() whose follow-up finished the request
+        res.status = status
+        res.error = error
+        res.preemptions = req.preemptions
+        if status != "ok":
+            self._count_status(status)
         t_sub = self._t_submit.pop(req.uid, None)
+        self._deadlines.pop(req.uid, None)
         t_first = st.get("t_first")
         if t_sub is not None and t_first is not None:
             res.ttft_s = t_first - t_sub
         if now is not None and t_first is not None and len(res.tokens) > 1:
             res.tpot_s = (now - t_first) / (len(res.tokens) - 1)
         self._finished.append(req.uid)
+        self._park_slot(slot)
+
+    def _park_slot(self, slot: int) -> None:
+        """Release a slot's cache state and return it to the free pool."""
         if self.paged:
             # unref, not free: pages the prefix cache still holds (and
             # pages shared into other live slots) survive the slot
@@ -1372,8 +1505,109 @@ class Engine:
         self._pos = self._pos.at[slot].set(0)
         self._last_tok = self._last_tok.at[slot, 0].set(0)
         self._active_dev = self._active_dev.at[slot].set(False)
+        self._remaining_dev = self._remaining_dev.at[slot].set(0)
         self._floor_dev = self._floor_dev.at[slot].set(0)
         self._free.append(slot)
+
+    def _count_status(self, status: str) -> None:
+        key = {"cancelled": "req_cancelled", "deadline": "req_deadline"} \
+            .get(status, "req_errors")
+        self.metrics[key] += 1
+
+    # --------------------------------------------------- request lifecycle
+    def _fail_request(self, req: Request, *, status: str,
+                      error: Optional[str] = None) -> None:
+        """Finish a request that never reached (or no longer holds) a
+        slot with a typed non-"ok" Result; tokens generated before a
+        preempt/failover restore are preserved."""
+        res = Result(req.uid, req.orig_prompt_len or len(req.prompt),
+                     list(req.prior_tokens), complete=False, status=status,
+                     error=error, preemptions=req.preemptions)
+        res.decode_steps = len(res.tokens)
+        t_sub = self._t_submit.pop(req.uid, None)
+        if t_sub is not None:
+            res.queue_wait_s = time.perf_counter() - t_sub
+        self._deadlines.pop(req.uid, None)
+        self._results[req.uid] = res
+        self._finished.append(req.uid)
+        self._count_status(status)
+
+    def cancel(self, uid: int, *, status: str = "cancelled",
+               error: Optional[str] = None) -> bool:
+        """Abort a request wherever it currently is — decoding in a slot,
+        mid-interleaved-prefill, or queued — unwinding pages/slot/radix
+        refs and recording a typed ``Result(status=...)``. Returns True
+        when the request was found (False: unknown or already finished).
+        """
+        for slot, st in list(self._active.items()):
+            if st["req"].uid == uid:
+                self._finish(slot, time.perf_counter(), status=status,
+                             error=error)
+                return True
+        for req in list(self._queue):
+            if req.uid == uid:
+                self._queue.remove(req)
+                self._fail_request(req, status=status, error=error)
+                return True
+        if self.sched is not None:
+            req = self.sched.cancel(uid)
+            if req is not None:
+                self._fail_request(req, status=status, error=error)
+                return True
+        return False
+
+    def _enforce_deadlines(self) -> None:
+        """Cancel expired requests (checked once at the top of every
+        step — deadline granularity is the engine step, matching the
+        one-host-sync-per-horizon design)."""
+        if not self._deadlines:
+            return
+        now = time.perf_counter()
+        active_uids = {st["req"].uid for st in self._active.values()}
+        for uid, (dl, qdl) in list(self._deadlines.items()):
+            if dl is not None and now >= dl:
+                self.cancel(uid, status="deadline",
+                            error=f"deadline_s exceeded after {now - dl:.3f}s")
+            elif qdl is not None and now >= qdl and uid not in active_uids:
+                self.cancel(uid, status="deadline",
+                            error="max_queue_wait_s exceeded before "
+                                  "activation")
+
+    # ---------------------------------------------------- preempt/restore
+    @staticmethod
+    def _make_resume(req: Request, generated: List[int]) -> Request:
+        """Recompute-resume continuation of a running request: generated
+        tokens extend the prompt, budget shrinks to match. Greedy decode
+        plus the chunked-prefill equivalence make re-serving this request
+        byte-identical to never having interrupted it."""
+        return dataclasses.replace(
+            req,
+            prompt=list(req.prompt) + list(generated),
+            max_new_tokens=req.max_new_tokens - len(generated),
+            prior_tokens=tuple(req.prior_tokens) + tuple(generated),
+            orig_prompt_len=req.orig_prompt_len or len(req.prompt),
+            preemptions=req.preemptions + 1)
+
+    def _preempt_victim(self, max_priority: int) -> Optional[int]:
+        """Slot of the best preemption victim: lowest priority strictly
+        below ``max_priority``, newest activation among ties (least sunk
+        decode work). None when nothing outranks — equal priorities never
+        preempt each other, so the default (all zero) cannot livelock."""
+        cands = [(st["req"].priority, -st["act_seq"], slot)
+                 for slot, st in self._active.items()
+                 if st["req"].priority < max_priority]
+        return min(cands)[2] if cands else None
+
+    def _preempt(self, slot: int) -> Request:
+        """Tear a running slot down (pages freed, slot recycled, device
+        state parked) and return its recompute-resume Request. The
+        request's Result shell stays registered — re-activation on
+        resume overwrites it."""
+        st = self._active.pop(slot)
+        resume = self._make_resume(st["req"], st["generated"])
+        self._park_slot(slot)
+        self.metrics["sched_preempted"] += 1
+        return resume
 
     def _maybe_retune(self) -> None:
         """Flush pending tuner probes (host side, between device steps).
@@ -1403,6 +1637,34 @@ class Engine:
         always progresses (every active slot commits >= 1 token per
         horizon/round), so the watchdog can only trip while the batch is
         empty with requests stuck waiting."""
+        try:
+            return self._step_inner(self._cur_step)
+        finally:
+            # one increment per step() call, raise or return — the fault
+            # injector keys every hook off this counter, and _reserve
+            # reads it mid-step, so it must hold still within a step
+            self._cur_step += 1
+
+    def _inject_mask(self, step_no: int):
+        """[B] bool mask of slots whose logits this step poisons (the
+        NaN-tripwire fault hook); the shared all-False array on the fast
+        path so the jit sees one constant donor-safe operand."""
+        if self.faults is None:
+            return self._zero_inject
+        by_uid = {st["req"].uid: slot for slot, st in self._active.items()}
+        uids = self.faults.nan_uids(step_no, by_uid)
+        if not uids:
+            return self._zero_inject
+        mask = np.zeros(self.max_batch, bool)
+        for u in uids:
+            mask[by_uid[u]] = True
+        self.metrics["faults_injected"] += len(uids)
+        return jnp.asarray(mask)
+
+    def _step_inner(self, step_no: int) -> int:
+        if self.faults is not None:
+            self.faults.sleep(step_no)
+        self._enforce_deadlines()
         self._maybe_retune()
         if self.sched is not None:
             ticked = self.sched.tick()
@@ -1415,7 +1677,7 @@ class Engine:
             return 0
         n_stepped = len(self._active)
         if self.spec:
-            return self._spec_step(n_stepped)
+            return self._spec_step(n_stepped, step_no)
         # never scan past the longest remaining budget: the tail of the
         # horizon would provably have no active slot (EOS can still empty
         # a horizon early — those steps run masked and are not recorded)
@@ -1423,10 +1685,16 @@ class Engine:
                       for st in self._active.values())
         length = min(self.horizon, rem_max)
 
+        inject = self._inject_mask(step_no)
         t0 = time.perf_counter()
         store = self.pages if self.paged else self.slots
         cache = store.take()                       # donated to the jit below
         try:
+            if self.faults is not None:
+                # the harshest crash point: the donated handle is already
+                # taken, so the unwind below must restore it or the engine
+                # dies of DonatedCacheError on the next step
+                self.faults.step_error(step_no)
             if self.paged:
                 with self._mesh_ctx():
                     ys, tok, new_cache, pos, active, remaining = \
@@ -1434,12 +1702,12 @@ class Engine:
                             length, self._attn_epoch, self.params,
                             self._last_tok, cache, self.pages.table(),
                             self._floor_dev, self._pos, self._active_dev,
-                            self._remaining_dev, self._eos_dev)
+                            self._remaining_dev, self._eos_dev, inject)
             else:
                 ys, tok, new_cache, pos, active, remaining = self._decode_jit(
                     length, self._attn_epoch, self.params, self._last_tok,
                     cache, self._pos, self._active_dev, self._remaining_dev,
-                    self._eos_dev)
+                    self._eos_dev, inject)
         except BaseException:
             # trace/compile failures leave the donated input untouched —
             # restore the handle so the engine stays usable and the real
@@ -1447,12 +1715,13 @@ class Engine:
             store.restore_if_undonated(cache)
             raise
         store.put(new_cache)
-        toks_t, act_t, stats_t = ys
+        toks_t, act_t, fault_t, stats_t = ys
         # the single host sync of the horizon: tokens, active masks and
         # the (tiny) per-step stats leaves come down in one device_get,
         # and the decode clock stops after it so the stats transfer is
         # billed to decode_s exactly like the per-token path did
-        toks_np, act_np, stats_np = jax.device_get((toks_t, act_t, stats_t))
+        toks_np, act_np, fault_np, stats_np = jax.device_get(
+            (toks_t, act_t, fault_t, stats_t))
         t_sync = time.perf_counter()
         self.metrics["decode_s"] += t_sync - t0
         any_act = act_np.any(axis=1)
@@ -1473,6 +1742,13 @@ class Engine:
             for slot in list(self._active):
                 if not act_np[t, slot]:
                     continue
+                if fault_np[t, slot]:
+                    # tripwire: this slot's logits went non-finite — its
+                    # emitted token is garbage; abort just this request
+                    self._finish(slot, t_sync, status="error",
+                                 error="non-finite logits (per-slot "
+                                       "NaN/poison tripwire)")
+                    continue
                 st = self._active[slot]
                 req = st["req"]
                 tokn = int(toks_np[t, slot])
@@ -1488,7 +1764,7 @@ class Engine:
             self.sched.watchdog(True)      # decode progressed
         return n_stepped
 
-    def _spec_step(self, n_stepped: int) -> int:
+    def _spec_step(self, n_stepped: int, step_no: int) -> int:
         """One fused speculative round: draft, verify, accept, rollback.
 
         Mirrors the horizon step's host side exactly — one device
@@ -1507,10 +1783,13 @@ class Engine:
             k = min(k_plan, rem_max)
         else:
             k, profile = min(self.draft_len, rem_max), self.draft_profile
+        inject = self._inject_mask(step_no)
         t0 = time.perf_counter()
         store = self.pages if self.paged else self.slots
         cache = store.take()                       # donated to the jit below
         try:
+            if self.faults is not None:
+                self.faults.step_error(step_no)
             if self.paged:
                 with self._mesh_ctx():
                     ys, tok, new_cache, pos, active, remaining = \
@@ -1518,28 +1797,31 @@ class Engine:
                             k, profile, self._attn_epoch, self.params,
                             self._last_tok, cache, self.pages.table(),
                             self._floor_dev, self._pos, self._active_dev,
-                            self._remaining_dev, self._eos_dev)
+                            self._remaining_dev, self._eos_dev, inject)
             else:
                 ys, tok, new_cache, pos, active, remaining = self._spec_jit(
                     k, profile, self._attn_epoch, self.params,
                     self._last_tok, cache, self._pos, self._active_dev,
-                    self._remaining_dev, self._eos_dev)
+                    self._remaining_dev, self._eos_dev, inject)
         except BaseException:
             store.restore_if_undonated(cache)
             raise
         store.put(new_cache)
-        toks_t, com_t, stats_t = ys
-        toks_np, com_np, stats_np = jax.device_get((toks_t, com_t, stats_t))
+        toks_t, com_t, fault_t, stats_t = ys
+        toks_np, com_np, fault_np, stats_np = jax.device_get(
+            (toks_t, com_t, fault_t, stats_t))
         t_sync = time.perf_counter()
         self.metrics["decode_s"] += t_sync - t0
         n_act = len(self._active)
+        n_fault = int(fault_np.sum())
         self.metrics["spec_rounds"] += 1
         self.metrics["draft_tokens"] += (k - 1) * n_act
-        # every active slot commits >= 1 exact token per round; commits
-        # beyond that first one are accepted draft proposals. Parked
-        # slots ran masked and commit nothing — they never dilute the
-        # acceptance accounting.
-        accepted = int(com_np.sum()) - n_act
+        # every non-faulted active slot commits >= 1 exact token per
+        # round; commits beyond that first one are accepted draft
+        # proposals. Parked slots ran masked and commit nothing, and a
+        # faulted slot's commits are zeroed by the verify tripwire — they
+        # never dilute the acceptance accounting.
+        accepted = int(com_np.sum()) - (n_act - n_fault)
         self.metrics["accepted_tokens"] += accepted
         self.metrics["decode_steps"] += int(com_np.any(axis=1).sum())
         if self.spec_ctl is not None:
@@ -1569,6 +1851,13 @@ class Engine:
                         or (req.eos_id is not None and tokn == req.eos_id))
                 if done:
                     self._finish(slot, t_sync)
+        # faulted rows committed nothing this round (the tripwire fires at
+        # verify, before any accept) — abort them after the commit drain
+        for slot in list(self._active):
+            if fault_np[slot]:
+                self._finish(slot, t_sync, status="error",
+                             error="non-finite logits (per-slot NaN/poison "
+                                   "tripwire)")
         if self.sched is not None:
             self.sched.watchdog(True)      # decode progressed
         return n_stepped
@@ -1750,6 +2039,9 @@ class Engine:
                 m["pred_decode_step_s"] = predict_engine_step(
                     registry.param_count(self.cfg, active_only=True),
                     self.max_batch, self.cfg.n_layers, ce, self.tuner.hw)
+        if self.faults is not None:
+            m["fault_plan"] = self.faults.plan.spec
+            m["faults_fired"] = len(self.faults.fired)
         m["spec_decode"] = self.spec
         if self.spec:
             m["draft_len"] = self.draft_len

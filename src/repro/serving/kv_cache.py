@@ -64,6 +64,13 @@ class _DonatableCache:
     def cache(self, value) -> None:
         self._cache = value
 
+    @property
+    def donated(self) -> bool:
+        """True while the handle is checked out (``take()`` without a
+        matching ``put()``/``restore_if_undonated``) — fault-path tests
+        assert this is False after an exception unwinds a decode step."""
+        return self._cache is None
+
     def take(self):
         """Hand the live cache out for a donating call; the stored handle
         becomes invalid until ``put`` installs the aliased output."""

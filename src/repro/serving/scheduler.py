@@ -39,9 +39,22 @@ rounds, doing three things:
 A **watchdog** closes the loop: if the engine makes no progress — no
 tokens decoded, nothing admitted, no prefill chunk advanced — for
 ``watchdog_steps`` consecutive steps (or ``watchdog_s`` wall seconds)
-while requests are still waiting, `WatchdogError` is raised naming the
-stuck requests instead of spinning forever (the classic case: a request
-whose page footprint exceeds what the pool can ever offer).
+while requests are still waiting, the stalled queue head is *shed* as a
+per-request ``Result(status="error")`` and serving continues (the
+classic case: a request whose page footprint exceeds what the pool can
+ever offer should fail alone, not kill the loop). After
+``watchdog_escalation`` sheds the next trip escalates to the legacy
+loop-fatal `WatchdogError` — repeated stalls mean the engine itself is
+wedged, not one bad request.
+
+**Preempt-and-restore** handles the opposite starvation: when the queue
+head has waited ``preempt_after`` consecutive no-admission ticks, the
+scheduler may preempt a strictly-lower-priority *running* request
+(vLLM-style recompute: free its slot and non-shared pages, requeue it
+with its generated tokens folded into the prompt) so the head admits
+instead of head-of-line blocking forever. Greedy decode plus the
+chunked-prefill equivalence make the victim's eventual resume
+byte-identical — and cheap when the prefix cache still holds its pages.
 
 The scheduler is pure host-side policy: every device-touching action
 (prefill jits, page reservation, slot install) goes through the engine's
@@ -55,6 +68,7 @@ import dataclasses
 import time
 from typing import TYPE_CHECKING, Any, Dict, List, Optional
 
+from repro.common.transient import TransientError
 from repro.serving.allocator import PoolExhausted
 
 if TYPE_CHECKING:  # import cycle: engine constructs the scheduler
@@ -65,6 +79,13 @@ class WatchdogError(RuntimeError):
     """The streaming serve loop stalled with requests still pending."""
 
 
+class QueueFull(TransientError):
+    """``submit()`` rejected: the waiting queue is at ``max_queue_depth``.
+
+    Typed backpressure instead of unbounded queue growth; it is a
+    `TransientError` — clients should back off and resubmit."""
+
+
 @dataclasses.dataclass
 class SchedulerConfig:
     """Knobs for `StreamScheduler` (see the module docstring).
@@ -73,17 +94,30 @@ class SchedulerConfig:
         step; None = one largest-bucket chunk per step. At least one
         chunk always runs per tick, so progress is guaranteed even when
         the budget is smaller than a chunk.
-    order: "prefix" admits biggest peeked cache hit first (FIFO among
-        ties and whenever the prefix cache is off); "fifo" disables the
-        reordering entirely.
+    order: "prefix" admits highest `Request.priority` first, then
+        biggest peeked cache hit (FIFO among ties and whenever the
+        prefix cache is off); "fifo" disables the reordering entirely.
     watchdog_steps / watchdog_s: consecutive no-progress engine steps /
-        wall seconds with pending requests before `WatchdogError`.
+        wall seconds with pending requests before the watchdog trips.
+    watchdog_escalation: a watchdog trip sheds the stalled queue head as
+        a per-request ``Result(status="error")`` and keeps serving; after
+        this many sheds the next trip raises `WatchdogError` (0 = legacy
+        loop-fatal on the first trip).
+    max_queue_depth: bound on ``depth``; ``submit()`` past it raises
+        `QueueFull`. None = unbounded (legacy).
+    preempt_after: consecutive no-admission ticks with work waiting
+        before a strictly-lower-priority running request may be
+        preempted (recompute-requeued) to unblock the queue head.
+        None disables preemption.
     """
 
     prefill_chunk_tokens: Optional[int] = None
     order: str = "prefix"
     watchdog_steps: int = 500
     watchdog_s: float = 120.0
+    watchdog_escalation: int = 8
+    max_queue_depth: Optional[int] = None
+    preempt_after: Optional[int] = 4
 
     def __post_init__(self):
         if self.order not in ("prefix", "fifo"):
@@ -96,6 +130,15 @@ class SchedulerConfig:
                 and self.prefill_chunk_tokens < 1:
             raise ValueError(f"prefill_chunk_tokens must be >= 1, got "
                              f"{self.prefill_chunk_tokens}")
+        if self.watchdog_escalation < 0:
+            raise ValueError(f"watchdog_escalation must be >= 0, got "
+                             f"{self.watchdog_escalation}")
+        if self.max_queue_depth is not None and self.max_queue_depth < 1:
+            raise ValueError(f"max_queue_depth must be >= 1, got "
+                             f"{self.max_queue_depth}")
+        if self.preempt_after is not None and self.preempt_after < 1:
+            raise ValueError(f"preempt_after must be >= 1, got "
+                             f"{self.preempt_after}")
 
 
 @dataclasses.dataclass
@@ -118,6 +161,11 @@ class StreamScheduler:
         self._chunk: Optional[Dict[str, Any]] = None
         self._idle_steps = 0
         self._last_progress = time.perf_counter()
+        #: watchdog trips so far (each shed one stalled request)
+        self._trips = 0
+        #: consecutive ticks the waiting head failed to admit — the
+        #: preempt-and-restore trigger
+        self._hol_ticks = 0
         #: admission log (uids in service-entry order) — tests pin the
         #: prefix-hit-first ordering through it
         self.admitted_uids: List[int] = []
@@ -155,24 +203,73 @@ class StreamScheduler:
 
     def watchdog(self, progressed: bool) -> None:
         """Called once per engine step with that step's overall progress
-        (any decode token, admission, or prefill chunk). Raises
-        `WatchdogError` after ``watchdog_steps`` consecutive idle steps
-        or ``watchdog_s`` idle wall seconds with requests pending."""
+        (any decode token, admission, or prefill chunk). A trip — after
+        ``watchdog_steps`` consecutive idle steps or ``watchdog_s`` idle
+        wall seconds with requests pending — sheds the stalled queue
+        head as a per-request failure and keeps serving; past
+        ``watchdog_escalation`` sheds (or with escalation 0) it raises
+        `WatchdogError` instead."""
         now = time.perf_counter()
         if progressed or self.depth == 0:
             self._idle_steps = 0
             self._last_progress = now
             return
         self._idle_steps += 1
-        if self._idle_steps >= self.cfg.watchdog_steps \
-                or now - self._last_progress >= self.cfg.watchdog_s:
-            uids = [r.uid for r in self.pending_requests()]
-            raise WatchdogError(
-                f"stream scheduler stalled: no decode, admission or "
-                f"prefill progress for {self._idle_steps} engine steps "
-                f"({now - self._last_progress:.1f}s) with request(s) "
-                f"{uids} pending — the queue head's slot/page footprint "
-                f"can never be satisfied, or the engine is wedged")
+        if self._idle_steps < self.cfg.watchdog_steps \
+                and now - self._last_progress < self.cfg.watchdog_s:
+            return
+        uids = [r.uid for r in self.pending_requests()]
+        msg = (f"stream scheduler stalled: no decode, admission or "
+               f"prefill progress for {self._idle_steps} engine steps "
+               f"({now - self._last_progress:.1f}s) with request(s) "
+               f"{uids} pending — the queue head's slot/page footprint "
+               f"can never be satisfied, or the engine is wedged")
+        self._trips += 1
+        esc = self.cfg.watchdog_escalation
+        if esc == 0 or self._trips > esc or not self._shed_stalled(msg):
+            raise WatchdogError(msg)
+        self._idle_steps = 0
+        self._last_progress = now
+
+    def _shed_stalled(self, msg: str) -> bool:
+        """Fail the stalled queue head (admission order) as a typed
+        per-request error so the loop survives one bad request."""
+        eng = self.eng
+        if self.waiting:
+            scored = [(w, self._hit_pages(w.req)) for w in self.waiting]
+            if self.cfg.order == "prefix":
+                scored.sort(key=lambda p: (-p[0].req.priority, -p[1],
+                                           p[0].seq))
+            w = scored[0][0]
+            self.waiting.remove(w)
+            victim = w.req
+        elif self._chunk is not None:
+            st = self._chunk
+            self._chunk = None
+            eng._abort_stream_prefill(st)
+            victim = st["req"]
+        else:
+            return False
+        eng.metrics["watchdog_shed"] += 1
+        eng._fail_request(victim, status="error", error=f"watchdog: {msg}")
+        return True
+
+    # ------------------------------------------------------------- cancel
+    def cancel(self, uid: int) -> Optional["Request"]:
+        """Remove ``uid`` from the waiting queue or the in-flight chunked
+        prefill (unwinding its slot/page reservation); returns the
+        request so the engine can finish it with a typed Result, or
+        None when ``uid`` is not queued here."""
+        for w in self.waiting:
+            if w.req.uid == uid:
+                self.waiting.remove(w)
+                return w.req
+        if self._chunk is not None and self._chunk["req"].uid == uid:
+            st = self._chunk
+            self._chunk = None
+            self.eng._abort_stream_prefill(st)
+            return st["req"]
+        return None
 
     # ----------------------------------------------------------- admission
     def _hit_pages(self, req: "Request") -> int:
@@ -202,13 +299,22 @@ class StreamScheduler:
     def _admit(self) -> bool:
         """Admit the largest prefix of the (ordered) waiting queue that
         fits the slot + page budget; long cold prompts open the
-        interleaved prefill instead of a blocking one."""
+        interleaved prefill instead of a blocking one. Tracks head-of-
+        line starvation and preempts lower-priority runners past the
+        ``preempt_after`` threshold."""
         eng = self.eng
-        if not self.waiting or not eng._free:
+        if not self.waiting:
+            self._hol_ticks = 0
             return False
         scored = [(w, self._hit_pages(w.req)) for w in self.waiting]
-        if self.cfg.order == "prefix" and eng.prefix is not None:
-            scored.sort(key=lambda p: (-p[1], p[0].seq))
+        if self.cfg.order == "prefix":
+            scored.sort(key=lambda p: (-p[0].req.priority, -p[1], p[0].seq))
+        if self.cfg.preempt_after is not None \
+                and self._hol_ticks >= self.cfg.preempt_after:
+            self._preempt_for(scored[0][0].req, scored[0][1])
+        if not eng._free:
+            self._hol_ticks += 1
+            return False
         free = len(eng._free)
         cap = eng._pages_capacity() if eng.paged else None
         stage: List[_Waiting] = []
@@ -256,7 +362,35 @@ class StreamScheduler:
                 if w.req.uid not in returned:
                     self._note_admitted(w.req.uid)
                     progressed = True
+        if progressed:
+            self._hol_ticks = 0
+        else:
+            self._hol_ticks += 1
         return progressed
+
+    # ---------------------------------------------- preempt-and-restore
+    def _preempt_for(self, head: "Request", hit: int) -> bool:
+        """Preempt strictly-lower-priority running requests until
+        ``head`` fits (vLLM-style recompute): each victim frees its slot
+        and non-shared pages and requeues with its generated tokens
+        folded into the prompt, so its eventual resume — a plain
+        re-admission through prefill — is byte-identical, and cheap
+        while the prefix cache still holds the victim's pages."""
+        eng = self.eng
+        preempted = False
+        while True:
+            need = self._fresh_pages_for(head, hit)
+            cap = eng._pages_capacity() if eng.paged else None
+            if eng._free and (cap is None or need <= cap):
+                break
+            slot = eng._preempt_victim(head.priority)
+            if slot is None:
+                break
+            self.enqueue(eng._preempt(slot))
+            preempted = True
+        if preempted:
+            self._hol_ticks = 0
+        return preempted
 
     def _reclaim(self, staged: Dict[int, _Waiting]) -> set:
         """Move whatever the engine unwound back to the waiting head,

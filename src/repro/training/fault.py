@@ -28,7 +28,14 @@ import logging
 import statistics
 import threading
 import time
-from typing import Callable, Deque, List, Optional, Tuple
+from typing import Callable, Deque, List, Optional, Tuple, Union
+
+from repro.common.transient import TransientError, is_transient
+
+__all__ = [
+    "StragglerEvent", "StepTimer", "Watchdog", "retry",
+    "elastic_mesh_shape", "TransientError", "is_transient",
+]
 
 log = logging.getLogger("repro.fault")
 
@@ -142,19 +149,34 @@ class Watchdog:
 
 
 def retry(fn: Callable, *args, retries: int = 2, backoff_s: float = 0.5,
-          transient: Tuple[type, ...] = (RuntimeError, OSError),
+          transient: Union[Tuple[type, ...],
+                           Callable[[BaseException], bool]] = is_transient,
           on_retry: Optional[Callable[[int, Exception], None]] = None):
     """Run `fn(*args)`, retrying transient failures with backoff.
+
+    `transient` is either a tuple of exception types or a predicate; the
+    default is the shared :func:`repro.common.is_transient` taxonomy, so
+    programming errors (shape mismatches, donated handles, injected
+    faults) fail fast instead of being retried with backoff — only
+    failures expected under load (collective timeouts, OS errors, typed
+    `TransientError`s) burn retry budget.
 
     `on_retry(attempt, exc)` runs before each retry — the hook where the
     launcher restores from the last checkpoint (device state after a
     failed collective is undefined; params must be reloaded).
     """
+    if isinstance(transient, tuple):
+        types = transient
+        matches = lambda e: isinstance(e, types)  # noqa: E731
+    else:
+        matches = transient
     attempt = 0
     while True:
         try:
             return fn(*args)
-        except transient as e:  # noqa: PERF203
+        except Exception as e:  # noqa: PERF203, BLE001 - classified below
+            if not matches(e):
+                raise
             attempt += 1
             if attempt > retries:
                 raise

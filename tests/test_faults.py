@@ -1,0 +1,402 @@
+"""Fault tolerance: lifecycle hardening, chaos injection, failover.
+
+The load-bearing invariant extends test_serving's byte-identity to the
+failure domain: whatever the harness breaks — a replica, one request's
+logits, the page pool, a whole engine step — every request the fault
+did NOT target must finish with tokens byte-identical to a fault-free
+run, every targeted request must come back as a typed non-"ok" Result
+(never an exception out of the serving loop, never a hang), and the
+page allocator must drain back to zero afterwards. The injection
+harness is deterministic (`FaultPlan` pins each event to a step
+number), so these are plain assertions, not flaky chaos.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.common.transient import TransientError, is_transient
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.serving import (Engine, PoolExhausted, QueueFull, Request,
+                           ReplicaSet, SchedulerConfig)
+from repro.serving.faults import (FaultInjector, FaultPlan, InjectedFault,
+                                  coerce_injector)
+from repro.training.fault import retry
+
+
+def _prompts(n, lo=4, hi=24, seed=0, vocab=250):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, size=int(rng.integers(lo, hi))).tolist()
+            for _ in range(n)]
+
+
+def _dense(cfg):
+    return cfg if cfg.hdp is None else cfg.replace(
+        hdp=cfg.hdp.replace(enabled=False))
+
+
+def _qwen():
+    return _dense(reduced(get_config("qwen2-1.5b")))
+
+
+def _solo_tokens(cfg, params, reqs, **engine_kw):
+    """Reference stream: each request served alone on a fresh engine."""
+    out = {}
+    for r in reqs:
+        solo = Engine(cfg, params=params, max_batch=1, max_len=64,
+                      prefill_buckets=(16, 32), **engine_kw)
+        solo.submit(Request(99, list(r.prompt),
+                            max_new_tokens=r.max_new_tokens))
+        out[r.uid] = solo.run()[99].tokens
+    return out
+
+
+# --------------------------------------------------------------- harness
+def test_fault_plan_parse_roundtrip():
+    spec = "slow@0:s=0.01;exhaust@2;nan@3:uid=7;error@4;kill@5:replica=1"
+    plan = FaultPlan.parse(spec)
+    assert len(plan) == 5
+    assert plan.spec == spec                    # events sort by step
+    assert FaultPlan.parse(plan.spec).spec == plan.spec
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("frobnicate@1")
+    with pytest.raises(ValueError, match="uid"):
+        FaultPlan.parse("nan@1")
+    with pytest.raises(ValueError, match="replica"):
+        FaultPlan.parse("kill@1")
+    with pytest.raises(ValueError, match="not 'kind@step"):
+        FaultPlan.parse("error")
+
+
+def test_injector_fires_each_event_once():
+    inj = FaultInjector("exhaust@2;nan@1:uid=5")
+    assert not inj.pool_exhausted(0)
+    assert not inj.pool_exhausted(1)
+    assert inj.pool_exhausted(5)          # at-or-after the scheduled step
+    assert not inj.pool_exhausted(5)      # consumed — fires exactly once
+    assert inj.nan_uids(3, {4}) == []     # uid 5 not live: stays pending
+    assert inj.nan_uids(3, {4, 5}) == [5]
+    assert inj.nan_uids(3, {4, 5}) == []
+    assert not inj.pending
+    assert len(inj.fired) == 2
+    with pytest.raises(InjectedFault):
+        FaultInjector("error@0").step_error(0)
+
+
+def test_coerce_injector_env_fallback(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULT_PLAN", raising=False)
+    assert coerce_injector(None) is None
+    assert coerce_injector("") is None
+    monkeypatch.setenv("REPRO_FAULT_PLAN", "exhaust@1")
+    inj = coerce_injector(None)
+    assert inj is not None and inj.plan.spec == "exhaust@1"
+    assert coerce_injector(None, env=False) is None
+    assert coerce_injector(inj) is inj    # injectors pass through shared
+
+
+# ------------------------------------------------------ transient taxonomy
+def test_transient_taxonomy_and_retry():
+    assert is_transient(TransientError("x"))
+    assert is_transient(PoolExhausted("pool"))  # subclass opt-in
+    assert is_transient(OSError("io"))
+    assert is_transient(RuntimeError("collective timeout"))
+    assert not is_transient(RuntimeError("shape mismatch"))
+    assert not is_transient(InjectedFault("boom"))  # hard by design
+    assert not is_transient(ValueError("bad"))
+
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TransientError("try again")
+        return "ok"
+
+    assert retry(flaky, retries=3, backoff_s=0.0) == "ok"
+    assert len(calls) == 3
+
+    def hard():
+        calls.append(1)
+        raise RuntimeError("assertion failed in kernel")
+
+    calls.clear()
+    with pytest.raises(RuntimeError, match="assertion"):
+        retry(hard, retries=3, backoff_s=0.0)
+    assert len(calls) == 1                # fail-fast: no retry burned
+
+
+# ----------------------------------------------------- lifecycle hardening
+def test_cancel_queued_and_active():
+    cfg = _qwen()
+    prompts = _prompts(4, seed=21)
+    eng = Engine(cfg, max_batch=2, max_len=64, prefill_buckets=(16, 32),
+                 stream_sched=True)
+    params = eng.params
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, max_new_tokens=8))
+    eng.step()                     # activates uids 0 and 1
+    assert eng.cancel(0)           # active mid-decode
+    assert eng.cancel(3)           # still waiting in the scheduler
+    assert not eng.cancel(17)      # unknown uid
+    out = eng.run()
+    for uid in (0, 3):
+        assert out[uid].status == "cancelled" and not out[uid].complete
+    ref = _solo_tokens(cfg, params,
+                       [Request(u, prompts[u], max_new_tokens=8)
+                        for u in (1, 2)])
+    for uid in (1, 2):             # batchmates unaffected, byte-identical
+        assert out[uid].status == "ok"
+        assert out[uid].tokens == ref[uid]
+    assert eng.metrics["req_cancelled"] == 2
+    eng.pages.allocator.assert_drained()
+
+
+def test_deadline_and_queue_wait_expiry():
+    cfg = _qwen()
+    prompts = _prompts(3, seed=22)
+    eng = Engine(cfg, max_batch=1, max_len=64, prefill_buckets=(16, 32),
+                 stream_sched=True)
+    eng.submit(Request(0, prompts[0], max_new_tokens=8))
+    # expires while decoding (deadline already in the past at step 1)
+    eng.submit(Request(1, prompts[1], max_new_tokens=8), deadline_s=0.0)
+    # expires while queued behind the single slot
+    eng.submit(Request(2, prompts[2], max_new_tokens=8),
+               max_queue_wait_s=0.0)
+    out = eng.run()
+    assert out[0].status == "ok" and out[0].complete
+    assert out[1].status == "deadline" and not out[1].complete
+    assert out[2].status == "deadline" and not out[2].complete
+    assert eng.metrics["req_deadline"] == 2
+    eng.pages.allocator.assert_drained()
+
+
+def test_submit_backpressure_queue_full():
+    cfg = _qwen()
+    prompts = _prompts(4, seed=23)
+    eng = Engine(cfg, max_batch=1, max_len=64, prefill_buckets=(16, 32),
+                 stream_sched=True,
+                 sched=SchedulerConfig(max_queue_depth=2))
+    for uid in range(2):
+        eng.submit(Request(uid, prompts[uid], max_new_tokens=4))
+    with pytest.raises(QueueFull, match="max_queue_depth=2"):
+        eng.submit(Request(2, prompts[2], max_new_tokens=4))
+    assert is_transient(QueueFull("typed backpressure is retryable"))
+    assert eng.metrics["queue_rejected"] == 1
+    out = eng.run()                         # rejected request left no trace
+    assert sorted(out) == [0, 1] and all(out[u].complete for u in out)
+
+
+# --------------------------------------------------------- injected faults
+def test_injected_step_error_restores_donated_cache():
+    cfg = _qwen()
+    prompts = _prompts(3, seed=24)
+    eng = Engine(cfg, max_batch=2, max_len=64, prefill_buckets=(16, 32),
+                 stream_sched=True, faults="error@1")
+    params = eng.params
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, max_new_tokens=6))
+    with pytest.raises(InjectedFault):
+        eng.run()
+    # the crash fired AFTER take() donated the cache handle — the unwind
+    # must have restored it, or every later step dies DonatedCacheError
+    assert not eng.pages.donated
+    out = eng.run()                # engine stays fully usable
+    ref = _solo_tokens(cfg, params,
+                       [Request(u, prompts[u], max_new_tokens=6)
+                        for u in range(3)])
+    for uid in range(3):
+        assert out[uid].complete and out[uid].tokens == ref[uid]
+    eng.pages.allocator.assert_drained()
+
+
+def test_injected_step_error_spec_decode():
+    cfg = _qwen()
+    prompts = _prompts(2, seed=25)
+    eng = Engine(cfg, max_batch=2, max_len=64, prefill_buckets=(16, 32),
+                 spec_decode=True, draft_len=3, faults="error@1")
+    params = eng.params
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, max_new_tokens=6))
+    with pytest.raises(InjectedFault):
+        eng.run()
+    assert not eng.pages.donated
+    out = eng.run()
+    ref = _solo_tokens(cfg, params,
+                       [Request(u, prompts[u], max_new_tokens=6)
+                        for u in range(2)])
+    for uid in range(2):
+        assert out[uid].complete and out[uid].tokens == ref[uid]
+    eng.pages.allocator.assert_drained()
+
+
+def test_injected_pool_exhaustion_defers_not_fails():
+    cfg = _qwen()
+    prompts = _prompts(4, seed=26)
+    eng = Engine(cfg, max_batch=2, max_len=64, prefill_buckets=(16, 32),
+                 stream_sched=True, faults="exhaust@0")
+    params = eng.params
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, max_new_tokens=5))
+    out = eng.run()                # stream scheduler defers and retries
+    assert eng.metrics["faults_injected"] >= 1
+    assert eng.metrics["sched_deferred"] >= 1
+    ref = _solo_tokens(cfg, params,
+                       [Request(u, prompts[u], max_new_tokens=5)
+                        for u in range(4)])
+    for uid in range(4):
+        assert out[uid].complete and out[uid].tokens == ref[uid]
+    eng.pages.allocator.assert_drained()
+
+
+def test_nan_tripwire_isolates_one_slot():
+    cfg = _qwen()
+    prompts = _prompts(3, seed=27)
+    eng = Engine(cfg, max_batch=3, max_len=64, prefill_buckets=(16, 32),
+                 stream_sched=True, decode_horizon=4, faults="nan@1:uid=1")
+    params = eng.params
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, max_new_tokens=8))
+    out = eng.run()
+    assert out[1].status == "error" and not out[1].complete
+    assert "non-finite" in out[1].error
+    assert eng.metrics["req_errors"] == 1
+    assert eng.metrics["faults_injected"] == 1
+    ref = _solo_tokens(cfg, params,
+                       [Request(u, prompts[u], max_new_tokens=8)
+                        for u in (0, 2)])
+    for uid in (0, 2):             # batchmates keep token-identical streams
+        assert out[uid].status == "ok" and out[uid].tokens == ref[uid]
+    eng.pages.allocator.assert_drained()
+
+
+def test_nan_tripwire_spec_decode():
+    cfg = _qwen()
+    prompts = _prompts(2, seed=28)
+    eng = Engine(cfg, max_batch=2, max_len=64, prefill_buckets=(16, 32),
+                 spec_decode=True, draft_len=3, faults="nan@1:uid=0")
+    params = eng.params
+    for uid, p in enumerate(prompts):
+        eng.submit(Request(uid, p, max_new_tokens=8))
+    out = eng.run()
+    assert out[0].status == "error" and not out[0].complete
+    ref = _solo_tokens(cfg, params,
+                       [Request(1, prompts[1], max_new_tokens=8)])
+    assert out[1].status == "ok" and out[1].tokens == ref[1]
+    # acceptance accounting must not go negative on the faulted round
+    assert eng.metrics["accepted_tokens"] >= 0
+    eng.pages.allocator.assert_drained()
+
+
+# ------------------------------------------------------ preempt-and-restore
+def test_preempt_and_restore_byte_identical():
+    cfg = _qwen()
+    prompts = _prompts(3, lo=12, hi=20, seed=29)
+    eng = Engine(cfg, max_batch=2, max_len=64, prefill_buckets=(16, 32),
+                 stream_sched=True,
+                 sched=SchedulerConfig(preempt_after=2, watchdog_steps=60))
+    params = eng.params
+    # two long low-priority requests fill both slots...
+    eng.submit(Request(0, prompts[0], max_new_tokens=24))
+    eng.submit(Request(1, prompts[1], max_new_tokens=24))
+    for _ in range(3):
+        eng.step()
+    # ...then a high-priority arrival must preempt one of them
+    eng.submit(Request(2, prompts[2], max_new_tokens=4, priority=1))
+    out = eng.run()
+    assert eng.metrics["sched_preempted"] >= 1
+    preempted = [u for u in out if out[u].preemptions >= 1]
+    assert preempted
+    ref = _solo_tokens(cfg, params,
+                       [Request(u, prompts[u],
+                                max_new_tokens=24 if u < 2 else 4)
+                        for u in range(3)])
+    for uid in range(3):           # including the preempted victim
+        assert out[uid].complete and out[uid].tokens == ref[uid], f"req {uid}"
+    eng.pages.allocator.assert_drained()
+
+
+# ----------------------------------------------------------- replica failover
+def test_replica_failover_exactly_once():
+    cfg = _qwen()
+    prompts = _prompts(4, seed=30)
+    rs = ReplicaSet.build(cfg, 2, max_batch=2, max_len=64,
+                          prefill_buckets=(16, 32), stream_sched=True,
+                          faults="kill@1:replica=0")
+    params = rs.engines[0].params
+    for uid, p in enumerate(prompts):
+        rs.submit(Request(uid, p, max_new_tokens=10))
+    out = rs.run()
+    s = rs.summary()
+    assert s["health"] == ["dead", "up"]
+    assert s["failovers"] == 1
+    assert s["requests_failed_over"] >= 1
+    assert s["faults_fired"] >= 1
+    assert len(s["replica_queue_depth"]) == 2
+    assert len(s["replica_inflight"]) == 2
+    assert len(s["replica_last_step_s"]) == 2
+    ref = _solo_tokens(cfg, params,
+                       [Request(u, prompts[u], max_new_tokens=10)
+                        for u in range(4)])
+    for uid in range(4):           # moved requests resume byte-identically
+        assert out[uid].complete and out[uid].tokens == ref[uid], f"req {uid}"
+    assert sorted(out) == [0, 1, 2, 3]   # exactly once each, no dupes
+    rs.engines[1].pages.allocator.assert_drained()  # survivor leaks nothing
+
+
+def test_all_replicas_dead_raises():
+    cfg = _qwen()
+    rs = ReplicaSet.build(cfg, 1, max_batch=1, max_len=64,
+                          prefill_buckets=(16, 32), stream_sched=True,
+                          faults="kill@0:replica=0")
+    rs.submit(Request(0, _prompts(1, seed=31)[0], max_new_tokens=4))
+    with pytest.raises(RuntimeError, match="every replica is dead"):
+        rs.run()
+
+
+# -------------------------------------------------------- chaos acceptance
+def test_chaos_identity_acceptance():
+    """The PR's acceptance gate: one seeded plan combining a replica
+    kill, a NaN-poisoned slot, an injected pool exhaustion and a
+    priority preemption — every non-faulted request must land
+    byte-identical to a fault-free run, the faulted one must return a
+    typed error, and the surviving allocator must drain to zero."""
+    cfg = _qwen()
+    prompts = _prompts(7, lo=10, hi=20, seed=32)
+    plan = "slow@0:s=0.005;exhaust@2;nan@1:uid=3;kill@3:replica=0"
+    rs = ReplicaSet.build(
+        cfg, 2, max_batch=2, max_len=64, prefill_buckets=(16, 32),
+        stream_sched=True, faults=plan,
+        sched=SchedulerConfig(preempt_after=2, watchdog_steps=80))
+    params = rs.engines[0].params
+    for uid in range(6):
+        rs.submit(Request(uid, prompts[uid], max_new_tokens=12))
+    # 5 pre-steps: replica 0 dies at fleet step 3 and fails its work over,
+    # and by step 5 the survivor's slots are BOTH re-occupied by long
+    # requests with more queued behind them — so the high-priority arrival
+    # below cannot slide into a free slot and must preempt
+    for _ in range(5):
+        rs.step()
+    rs.submit(Request(6, prompts[6], max_new_tokens=4, priority=1))
+    out = rs.run(max_steps=400)
+
+    s = rs.summary()
+    assert s["failovers"] == 1 and s["health"].count("dead") == 1
+    assert rs.faults is not None and not rs.faults.pending  # plan consumed
+    total_preempted = sum(e.metrics["sched_preempted"] for e in rs.engines)
+    assert total_preempted >= 1
+
+    # the NaN-targeted request errors; everyone else is byte-identical
+    assert out[3].status == "error" and not out[3].complete
+    ref = _solo_tokens(cfg, params,
+                       [Request(u, prompts[u],
+                                max_new_tokens=12 if u < 6 else 4)
+                        for u in range(7) if u != 3])
+    for uid in ref:
+        assert out[uid].status == "ok" and out[uid].complete, f"req {uid}"
+        assert out[uid].tokens == ref[uid], f"req {uid}"
+    # no request lost, none served twice
+    assert sorted(out) == list(range(7))
+    for i, eng in enumerate(rs.engines):   # survivors drain to zero
+        if rs.health[i] == "up":
+            eng.pages.allocator.assert_drained()

@@ -149,13 +149,30 @@ def test_chunked_prefill_interleaves_with_decode():
         assert out[uid].tokens == solo.run()[99].tokens, f"req {uid}"
 
 
-def test_watchdog_fires_on_stuck_request():
+def test_watchdog_sheds_stuck_request():
     cfg = _qwen()
     # 2 usable pages but the request's footprint needs 4: no amount of
-    # waiting can ever admit it — the watchdog must raise, not spin
+    # waiting can ever admit it — the watchdog must shed it as a typed
+    # per-request failure instead of killing the serving loop
     eng = Engine(cfg, max_batch=1, max_len=64, prefill_buckets=(16, 32),
                  num_pages=3, stream_sched=True,
                  sched=SchedulerConfig(watchdog_steps=5))
+    eng.submit(Request(0, _prompts(1, lo=20, hi=21, seed=5)[0],
+                       max_new_tokens=30))
+    out = eng.run()
+    assert out[0].status == "error" and not out[0].complete
+    assert "watchdog" in out[0].error
+    assert eng.metrics["watchdog_shed"] == 1
+    eng.pages.allocator.assert_drained()
+
+
+def test_watchdog_escalation_zero_raises():
+    cfg = _qwen()
+    # escalation 0 restores the legacy loop-fatal behaviour
+    eng = Engine(cfg, max_batch=1, max_len=64, prefill_buckets=(16, 32),
+                 num_pages=3, stream_sched=True,
+                 sched=SchedulerConfig(watchdog_steps=5,
+                                       watchdog_escalation=0))
     eng.submit(Request(0, _prompts(1, lo=20, hi=21, seed=5)[0],
                        max_new_tokens=30))
     with pytest.raises(WatchdogError, match=r"\[0\] pending"):
